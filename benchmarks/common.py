@@ -1,0 +1,179 @@
+"""Shared benchmark utilities: timing, workloads, platform harnesses.
+
+The paper's four execution platforms (Fig. 3) map to:
+  host    — the workload called directly;
+  boinc   — through the volunteer scheduler (work unit + lease + validate);
+  vm      — inside a booted capsule runtime (control plane + integrity hash);
+  vboinc  — capsule + scheduler + periodic differencing snapshots.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclass
+class Timing:
+    name: str
+    mean_s: float
+    std_s: float
+    reps: int
+
+    @property
+    def us(self) -> float:
+        return self.mean_s * 1e6
+
+
+def time_fn(fn: Callable[[], object], *, reps: int = 5,
+            warmup: int = 1) -> Timing:
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return Timing(getattr(fn, "__name__", "fn"),
+                  float(np.mean(ts)), float(np.std(ts)), reps)
+
+
+def csv_line(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+# ---------------------------------------------------------------------------
+# The six Fig-3 workload analogues (jax/numpy-native, CPU-scaled)
+# ---------------------------------------------------------------------------
+def make_workloads(scale: float = 1.0):
+    import jax
+    import jax.numpy as jnp
+
+    n = int(512 * scale)
+    big = int(4e6 * scale)
+
+    @jax.jit
+    def _mm(x):
+        for _ in range(4):
+            x = jnp.tanh(x @ x)
+        return x
+
+    x0 = jnp.asarray(np.random.default_rng(0)
+                     .standard_normal((n, n)).astype(np.float32))
+
+    def cpu():                       # compute-bound (paper: Stress CPU)
+        return np.asarray(_mm(x0)).sum()
+
+    @jax.jit
+    def _sieve(v):
+        i = jnp.arange(v.shape[0])
+        return jnp.sum(jnp.where(i % 7 != 0, v, 0) ** 2)
+
+    v0 = jnp.arange(big, dtype=jnp.float32)
+
+    def primes():                    # the paper's Primes benchmark
+        return np.asarray(_sieve(v0))
+
+    def memory():                    # bandwidth-bound (Stress Memory)
+        a = np.random.default_rng(1).standard_normal(big).astype(np.float32)
+        for _ in range(4):
+            a = a[::-1].copy()
+        return a.sum()
+
+    def io():                        # host<->device churn (Stress I/O)
+        a = np.ones(big // 2, np.float32)
+        for _ in range(4):
+            d = jnp.asarray(a)
+            a = np.asarray(d) + 1
+        return a[0]
+
+    import tempfile
+    from pathlib import Path
+    tmp = Path(tempfile.mkdtemp(prefix="repro-bench-"))
+
+    def disk():                      # disk-bound (Stress Disk)
+        p = tmp / "blob.bin"
+        a = np.ones(big, np.float32)
+        a.tofile(p)
+        b = np.fromfile(p, np.float32)
+        return b[-1]
+
+    def create5gb():                 # paper Create5GB via dd (scaled)
+        p = tmp / "dd.bin"
+        with open(p, "wb") as f:
+            f.write(b"\0" * (big * 4))
+        return p.stat().st_size
+
+    return {"cpu": cpu, "primes": primes, "memory": memory,
+            "io": io, "disk": disk, "create5gb": create5gb}
+
+
+# ---------------------------------------------------------------------------
+# Platform harnesses
+# ---------------------------------------------------------------------------
+def run_host(fn) -> None:
+    fn()
+
+
+def run_boinc(fn, sched=None) -> None:
+    """Workload as a validated work unit through the scheduler."""
+    import hashlib
+
+    from repro.core.scheduler import SimClock, VolunteerScheduler
+    sched = sched or VolunteerScheduler(clock=SimClock())
+    sched.join("local")
+    uid = len(sched.units)
+    sched.submit(uid, {"fn": getattr(fn, "__name__", "wl")})
+    unit = sched.request_work("local")
+    result = fn()
+    h = hashlib.sha256(repr(result).encode()).hexdigest()
+    assert sched.report("local", unit.unit_id, h)
+
+
+class CapsulePlatform:
+    """A booted capsule runtime hosting arbitrary workloads ("VM")."""
+
+    def __init__(self, snapshot_state: Optional[Callable] = None):
+        from repro.core.control import CapsuleRuntime, HostSupervisor
+        self._snap_state = snapshot_state
+        self.runtime = CapsuleRuntime("bench-capsule",
+                                      on_snapshot=self._snapshot)
+        self.sup = HostSupervisor("bench-host", self.runtime)
+        self.sup.control_vm("startvm")
+        self.snapshots = None
+        self.store = None
+
+    def attach_snapshots(self, keep_last: int = 3):
+        from repro.core.chunkstore import ChunkStore
+        from repro.core.snapshots import SnapshotManager
+        self.store = ChunkStore()
+        self.snapshots = SnapshotManager(self.store, keep_last=keep_last)
+        return self.snapshots
+
+    def _snapshot(self):
+        if self.snapshots is not None and self._snap_state is not None:
+            return self.snapshots.snapshot(self._snap_state(), step=0)
+        return None
+
+    def run(self, fn) -> object:
+        import hashlib
+        assert self.runtime.accepting_work
+        result = fn()
+        # integrity hash of results before upload (sandbox/trust analogue)
+        hashlib.sha256(repr(result).encode()).hexdigest()
+        self.runtime.heartbeat()
+        return result
+
+
+def run_vm(fn, capsule: Optional[CapsulePlatform] = None) -> None:
+    (capsule or CapsulePlatform()).run(fn)
+
+
+def run_vboinc(fn, capsule: CapsulePlatform, sched=None,
+               snapshot_every: bool = False) -> None:
+    """Capsule + scheduler (+ optional snapshot after the unit)."""
+    run_boinc(lambda: capsule.run(fn), sched)
+    if snapshot_every and capsule.snapshots is not None:
+        capsule.sup.control_vm("snapshot")

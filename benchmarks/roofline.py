@@ -1,0 +1,68 @@
+"""Roofline table generator: reads the dry-run JSONs (§Dry-run) and emits
+the per-(arch × shape × mesh) three-term table for EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_line
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_records(dryrun_dir: Path = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute (s) | memory (s) | collective (s)"
+           " | dominant | useful/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        f = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {f['compute_s']:.3e} | {f['memory_s']:.3e} "
+            f"| {f['collective_s']:.3e} | {f['dominant']} "
+            f"| {f['useful_flops_ratio']:.2f} "
+            f"| {f['roofline_fraction']:.2f} |")
+    return "\n".join(rows)
+
+
+def run() -> list[str]:
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    lines = [csv_line("roofline.cells_ok", 0.0, f"count={len(ok)}"),
+             csv_line("roofline.cells_skipped", 0.0,
+                      f"count={len(skipped)} (documented)"),
+             csv_line("roofline.cells_error", 0.0, f"count={len(err)}")]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        best = max(ok, key=lambda r: r["roofline"]["roofline_fraction"])
+        coll = max(ok, key=lambda r: r["roofline"]["collective_s"]
+                   / max(r["roofline"]["bound_s"], 1e-30))
+        lines += [
+            csv_line("roofline.worst", 0.0,
+                     f"{worst['arch']}/{worst['shape']}/{worst['mesh']}="
+                     f"{worst['roofline']['roofline_fraction']:.3f}"),
+            csv_line("roofline.best", 0.0,
+                     f"{best['arch']}/{best['shape']}/{best['mesh']}="
+                     f"{best['roofline']['roofline_fraction']:.3f}"),
+            csv_line("roofline.most_collective_bound", 0.0,
+                     f"{coll['arch']}/{coll['shape']}/{coll['mesh']}"),
+        ]
+    return lines
+
+
+if __name__ == "__main__":
+    print(table(load_records()))
+    print("\n".join(run()))

@@ -1,0 +1,83 @@
+"""DepDisk project switching: fine-tune TWO tasks off one shared base model.
+
+The paper's §III-C claim: "when a user attaches to another BOINC project, a
+new DepDisk need only be 'plugged in' … as opposed to downloading both a new
+virtual machine image and DepDisk."  Here: the base disk holds the shared
+pretrained params; each task's optimizer state lives in its own DepDisk.
+Switching tasks = detach/attach; the base never moves again (chunk dedup
+proves it: zero new bytes on re-snapshot).
+
+    PYTHONPATH=src python examples/project_switch.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.chunkstore import ChunkStore
+from repro.core.depdisk import DiskSet
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.distributed.sharding import init_tree
+from repro.models import api
+from repro.models.lm import RunConfig
+from repro.optim import adamw
+
+
+def main():
+    cfg = reduced(get_arch("qwen2-1.5b"))
+    run = RunConfig(remat="none", block_kv=16, ssm_chunk=8)
+    specs = api.state_specs(cfg)
+    params = init_tree(specs.params, jax.random.key(0))
+
+    store = ChunkStore(chunk_bytes=1 << 14)
+    disks = DiskSet(store, keep_last=2)
+    base_info = disks.create_base(params)
+    print(f"base disk (shared pretrained params): "
+          f"{base_info.total_bytes / 1e6:.1f} MB, "
+          f"{base_info.new_bytes / 1e6:.1f} MB stored")
+
+    oc = adamw.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=200)
+    loss_fn = api.make_eval_loss(cfg, run)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    def train_task(task: str, params, opt, seed: int, steps: int = 6):
+        stream = TokenStream(DataConfig(cfg.vocab_size, 32, 8, seed=seed))
+        for i in range(steps):
+            loss, g = grad_fn(params, stream.batch(i))
+            params, opt, _ = adamw.update(oc, g, opt, params)
+        return float(loss), params, opt
+
+    # ---- task A: attach a fresh DepDisk ("fresh disk locally created")
+    optA = init_tree(specs.opt, jax.random.key(1))
+    disks.attach_dep("taskA")
+    lossA, paramsA, optA = train_task("A", params, optA, seed=10)
+    infoA = disks.snapshot_disk("taskA", {"params": paramsA, "opt": optA},
+                                step=0)
+    print(f"taskA trained (loss {lossA:.3f}); DepDisk snapshot "
+          f"{infoA.new_bytes / 1e6:.1f} MB")
+
+    # ---- switch project: only the DepDisk changes hands
+    disks.swap_task("taskA", "taskB")
+    optB = init_tree(specs.opt, jax.random.key(2))
+    lossB, paramsB, optB = train_task("B", params, optB, seed=99)
+    infoB = disks.snapshot_disk("taskB", {"params": paramsB, "opt": optB},
+                                step=0)
+    # base re-snapshot costs nothing: every chunk dedups
+    base_again = disks.snapshot_disk("base", params, step=1)
+    print(f"taskB trained (loss {lossB:.3f}); DepDisk snapshot "
+          f"{infoB.new_bytes / 1e6:.1f} MB")
+    print(f"base disk re-snapshot after switch: "
+          f"{base_again.new_bytes} new bytes (all chunks deduped)")
+    assert base_again.new_bytes == 0
+
+    # ---- resume task A later from its DepDisk
+    disks._attached["taskA"] = True
+    got, _ = disks.restore_disk(
+        "taskA", target_tree={"params": paramsA, "opt": optA})
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree.leaves(got["params"])[0]),
+        np.asarray(jax.tree.leaves(paramsA)[0]))
+    print("taskA resumed bit-exactly from its DepDisk. OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Quickstart: boot a V-BOINC capsule and train a small LM with volunteers.
+
+Runs on CPU in ~a minute.  Demonstrates the paper's full Figure-1 flow:
+server publishes a capsule -> client probes dependencies -> DepDisks attach
+-> volunteer scheduler distributes validated work units -> differencing
+snapshots guarantee recovery.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.capsule import CapsuleSpec
+from repro.core.chunkstore import ChunkStore
+from repro.core.elastic import SimWorker, VolunteerTrainer
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.server import Project, VBoincServer
+from repro.core.snapshots import SnapshotManager
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.distributed.sharding import init_tree
+from repro.models import api
+from repro.models.lm import RunConfig
+from repro.optim import adamw
+
+
+def main():
+    # ---- server side: publish the project ("VM image" + DepDisk manifest)
+    store = ChunkStore()
+    server = VBoincServer(store)
+    spec = CapsuleSpec("granite-3-2b", "train_4k", RunConfig(remat="none"),
+                       arch_override=reduced(get_arch("granite-3-2b")))
+    server.publish(Project("quickstart-lm", spec,
+                           dep_manifest={"disk": "optimizer-state"}))
+    key = server.register_user("you")
+
+    # ---- client side: fetch + verify the capsule
+    fetched, missing, moved = server.fetch_capsule("quickstart-lm", set(), key)
+    assert fetched.manifest_hash == spec.manifest_hash, "tampered capsule!"
+    deps = server.probe_dependencies("quickstart-lm")
+    print(f"capsule {fetched.manifest_hash[:12]} fetched "
+          f"({moved} B moved); dependencies: {deps}")
+
+    # ---- build the training job from the verified capsule spec
+    cfg = fetched.arch
+    run = fetched.run
+    specs = api.state_specs(cfg)
+    oc = adamw.AdamWConfig(lr=5e-3, warmup_steps=10, total_steps=400)
+    loss_fn = api.make_eval_loss(cfg, run)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    def apply_fn(state, grads):
+        p, o, _ = adamw.update(oc, grads, state.opt, state.params)
+        return api.TrainState(p, o)
+
+    state = api.TrainState(init_tree(specs.params, jax.random.key(0)),
+                           init_tree(specs.opt, jax.random.key(0)))
+    trainer = VolunteerTrainer(
+        grad_fn=grad_fn, apply_fn=apply_fn, state=state,
+        stream=TokenStream(DataConfig(cfg.vocab_size, 32, 8, seed=0)),
+        micro_batches=2,
+        scheduler=VolunteerScheduler(replication=2, quorum=2,
+                                     deadline_s=10.0, clock=SimClock()),
+        snapshots=SnapshotManager(store, keep_last=2), snapshot_every=5)
+
+    # ---- volunteers: one of them lies, one is flaky
+    trainer.add_worker(SimWorker("honest-0"))
+    trainer.add_worker(SimWorker("honest-1"))
+    trainer.add_worker(SimWorker("liar", corrupt_prob=0.2,
+                                 rng=np.random.default_rng(1)))
+    trainer.add_worker(SimWorker("flaky", fail_prob=0.1,
+                                 rng=np.random.default_rng(2)))
+    trainer.respawn = lambda tr: tr.add_worker(
+        SimWorker(f"fresh-{len(tr.workers)}"))
+
+    for s in range(30):
+        st = trainer.round(s)
+        if s % 5 == 0 or s == 29:
+            print(f"step {st.step:3d} loss {st.loss:.4f} "
+                  f"(invalid results caught: {st.invalid}, "
+                  f"snapshot bytes: {st.snapshot_bytes})")
+    print(f"\nscheduler: {trainer.sched.stats}")
+    credit = {w.worker_id: round(w.credit, 1)
+              for w in trainer.sched.workers.values()}
+    print(f"credit: {credit}")
+    assert trainer.history[-1].loss < trainer.history[0].loss - 0.5
+    print("OK: loss decreased under a faulty volunteer fleet.")
+
+
+if __name__ == "__main__":
+    main()

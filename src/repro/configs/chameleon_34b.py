@@ -1,0 +1,10 @@
+"""Assigned architecture config (exact figures from the assignment table)."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="chameleon-34b", family="vlm",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8,
+    d_ff=22016, vocab_size=65536,
+    frontend="vq_image",
+    source="arXiv:2405.09818; early-fusion, VQ image tokens",
+))

@@ -1,0 +1,10 @@
+"""Assigned architecture config (exact figures from the assignment table)."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2410.05355; mamba1, attention-free",
+))

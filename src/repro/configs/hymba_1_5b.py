@@ -1,0 +1,10 @@
+"""Assigned architecture config (exact figures from the assignment table)."""
+from repro.configs.base import ArchConfig, MoEConfig, SSMConfig, register
+
+CONFIG = register(ArchConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5,
+    d_ff=5504, vocab_size=32001,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+    source="arXiv:2411.13676; parallel attn+mamba heads",
+))

@@ -1,0 +1,91 @@
+"""Compute Capsules — the "VM image" (paper §III-B).
+
+A capsule is a hermetic, topology-free bundle: arch config + shape + run
+config + a content-addressed manifest.  "Compile your application on a single
+architecture" becomes *define once, instantiate on any volunteer mesh*:
+``instantiate(mesh)`` resolves shardings and compiles the step functions for
+that mesh, measuring boot time (the paper's <20 s VM boot requirement maps to
+compile+restore latency, reported by the Fig-3 benchmark).
+
+The manifest hash gives volunteers end-to-end integrity over what they run
+(the paper's trusted-application concern), and the V-BOINC *server*
+(core/server.py) distributes capsules exactly like VM images.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch
+from repro.core.chunkstore import sha256
+from repro.models.lm import RunConfig
+
+
+@dataclass(frozen=True)
+class CapsuleSpec:
+    arch_name: str
+    shape_name: str
+    run: RunConfig
+    version: str = "1"
+    # reduced override for CPU smoke capsules (None = full assigned config)
+    arch_override: Optional[ArchConfig] = None
+
+    def manifest(self) -> dict:
+        run = dataclasses.asdict(self.run)
+        run["compute_dtype"] = jnp.dtype(self.run.compute_dtype).name
+        m = {"arch": self.arch_name, "shape": self.shape_name,
+             "run": run, "version": self.version}
+        if self.arch_override is not None:
+            m["arch_override"] = dataclasses.asdict(self.arch_override)
+        return m
+
+    @property
+    def manifest_hash(self) -> str:
+        return sha256(json.dumps(self.manifest(), sort_keys=True,
+                                 default=str).encode())
+
+    @property
+    def arch(self) -> ArchConfig:
+        return self.arch_override or get_arch(self.arch_name)
+
+    @property
+    def shape(self) -> ShapeConfig:
+        return SHAPES[self.shape_name]
+
+
+@dataclass
+class BootedCapsule:
+    spec: CapsuleSpec
+    cell: Any                      # launch.cell.Cell (jitted step + specs)
+    boot_wall_s: float             # "VM boot time"
+    mesh_desc: str
+
+    @property
+    def step(self):
+        return self.cell.step
+
+
+def boot(spec: CapsuleSpec, mesh, *, verify_hash: Optional[str] = None,
+         compile_now: bool = True) -> BootedCapsule:
+    """Instantiate a capsule on a mesh (any topology).
+
+    ``verify_hash`` rejects a tampered capsule before any compute runs —
+    the volunteer-side trust check.
+    """
+    from repro.launch.cell import build_cell   # local import: no jax at module load
+
+    if verify_hash is not None and verify_hash != spec.manifest_hash:
+        raise PermissionError("capsule manifest hash mismatch — refusing to "
+                              "boot untrusted image")
+    t0 = time.time()
+    cell = build_cell(spec.arch, spec.shape, mesh, spec.run)
+    if compile_now:
+        cell.step.lower(*cell.abstract_args).compile()
+    desc = "x".join(str(s) for s in mesh.devices.shape) \
+        + ":" + ",".join(mesh.axis_names)
+    return BootedCapsule(spec, cell, time.time() - t0, desc)

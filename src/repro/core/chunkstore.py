@@ -1,0 +1,121 @@
+"""Content-addressed chunk store — the substrate for differencing snapshots.
+
+VirtualBox differencing images store "all write operations after a snapshot";
+our analogue chunks every tensor into fixed-size blocks, keyed by SHA-256.
+A snapshot manifest is a list of chunk hashes per tensor; a *differencing*
+snapshot re-uses every unchanged chunk of its parent for free (same hash →
+same object), so its incremental cost is exactly the written-to blocks —
+the paper's Table II behaviour (CPU-bound workloads → ~zero snapshot size,
+memory/disk-heavy → large) falls out by construction.
+
+The store backend is a directory of hash-named objects (or in-memory for
+tests).  Integrity = re-hash on read (the paper's "trusted application"
+concern: a volunteer can verify every byte it receives).
+"""
+from __future__ import annotations
+
+import hashlib
+import os
+import threading
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Optional
+
+DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB
+
+
+def sha256(data: bytes) -> str:
+    return hashlib.sha256(data).hexdigest()
+
+
+class ChunkStore:
+    """Deduplicating object store with refcount GC."""
+
+    def __init__(self, root: Optional[os.PathLike] = None,
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+        self.chunk_bytes = int(chunk_bytes)
+        self.root = Path(root) if root is not None else None
+        if self.root is not None:
+            (self.root / "objects").mkdir(parents=True, exist_ok=True)
+        self._mem: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.stats = {"put_bytes": 0, "dedup_bytes": 0, "get_bytes": 0,
+                      "put_chunks": 0, "dedup_chunks": 0}
+
+    # -- object layer ------------------------------------------------------
+    def _path(self, h: str) -> Path:
+        return self.root / "objects" / h[:2] / h[2:]
+
+    def has(self, h: str) -> bool:
+        if self.root is None:
+            return h in self._mem
+        return h in self._mem or self._path(h).exists()
+
+    def put(self, data: bytes) -> str:
+        h = sha256(data)
+        with self._lock:
+            if self.has(h):
+                self.stats["dedup_bytes"] += len(data)
+                self.stats["dedup_chunks"] += 1
+                return h
+            self.stats["put_bytes"] += len(data)
+            self.stats["put_chunks"] += 1
+            if self.root is None:
+                self._mem[h] = bytes(data)
+            else:
+                p = self._path(h)
+                p.parent.mkdir(parents=True, exist_ok=True)
+                tmp = p.with_suffix(".tmp")
+                tmp.write_bytes(data)
+                os.replace(tmp, p)  # atomic publish
+        return h
+
+    def get(self, h: str) -> bytes:
+        if self.root is None or h in self._mem:
+            data = self._mem[h]
+        else:
+            data = self._path(h).read_bytes()
+        if sha256(data) != h:  # integrity (sandbox/trust analogue)
+            raise IOError(f"chunk {h[:12]} failed integrity check")
+        self.stats["get_bytes"] += len(data)
+        return data
+
+    def delete(self, h: str) -> None:
+        with self._lock:
+            self._mem.pop(h, None)
+            if self.root is not None:
+                p = self._path(h)
+                if p.exists():
+                    p.unlink()
+
+    def all_hashes(self) -> Iterable[str]:
+        out = set(self._mem)
+        if self.root is not None:
+            for sub in (self.root / "objects").glob("*/*"):
+                out.add(sub.parent.name + sub.name)
+        return out
+
+    # -- tensor layer ------------------------------------------------------
+    def put_buffer(self, buf: memoryview) -> list[str]:
+        """Chunk + store one tensor's bytes; returns the hash list."""
+        buf = memoryview(buf).cast("B")
+        return [self.put(bytes(buf[o:o + self.chunk_bytes]))
+                for o in range(0, max(len(buf), 1), self.chunk_bytes)]
+
+    def get_buffer(self, hashes: list[str]) -> bytes:
+        return b"".join(self.get(h) for h in hashes)
+
+    def gc(self, live: set[str]) -> int:
+        """Delete all objects not in ``live``; returns count removed."""
+        dead = [h for h in self.all_hashes() if h not in live]
+        for h in dead:
+            self.delete(h)
+        return len(dead)
+
+
+@dataclass
+class StoreStats:
+    put_bytes: int = 0
+    dedup_bytes: int = 0
+    chunks: int = 0
+    extra: dict = field(default_factory=dict)

@@ -1,0 +1,127 @@
+"""BaseDisk / DepDisk state partitioning (paper §III-C).
+
+V-BOINC splits the VM over two VDI files: a minimal *fixed-size* base image
+(FDI) and growable *dependency disks* (DDI) that are attached per project, so
+switching projects only swaps the DepDisk.  Our analogue partitions training
+state into namespaces with independent manifests and lifecycle:
+
+* ``base``  — model parameters: fixed layout, content-addressed, shared by
+  every task fine-tuning the same model (the "649 MB FDI").
+* DepDisks  — optimizer state, task adapters (LoRA), KV caches: created
+  empty ("fresh disk locally created"), grow chunk-on-write, attach/detach
+  without touching the base.
+
+Snapshot sizes are reported per-disk, reproducing Table II's separate
+"DepDisk Snapshot Size" / "VM Snapshot Size" columns.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional
+
+from repro.core.chunkstore import ChunkStore
+from repro.core.snapshots import Manifest, SnapshotInfo, SnapshotManager
+
+
+@dataclass
+class DiskInfo:
+    name: str
+    kind: str                   # base (FDI) | dep (DDI)
+    attached: bool
+    snapshots: int
+    logical_bytes: int
+
+
+class DiskSet:
+    """A capsule's attached storage: one base disk + N dependency disks."""
+
+    def __init__(self, store: ChunkStore, root=None, keep_last: int = 3):
+        self.store = store
+        self._managers: Dict[str, SnapshotManager] = {}
+        self._kinds: Dict[str, str] = {}
+        self._attached: Dict[str, bool] = {}
+        self._root = root
+        self._keep_last = keep_last
+
+    # ------------------------------------------------------------------
+    def _mgr(self, name: str) -> SnapshotManager:
+        if name not in self._managers:
+            sub = None if self._root is None else self._root / name
+            # auto_gc off: the store is shared across disks, so only the
+            # DiskSet-level mark (gc_all) may sweep it.
+            self._managers[name] = SnapshotManager(
+                self.store, root=sub, keep_last=self._keep_last,
+                auto_gc=False)
+        return self._managers[name]
+
+    def create_base(self, params, *, step: int = 0) -> SnapshotInfo:
+        """Register the fixed base image (model params)."""
+        self._kinds["base"] = "base"
+        self._attached["base"] = True
+        return self._mgr("base").snapshot(params, step=step)
+
+    def attach_dep(self, name: str, state: Any = None, *,
+                   step: int = 0) -> Optional[SnapshotInfo]:
+        """Attach a DepDisk; fresh (empty) if no state is given."""
+        if name == "base":
+            raise ValueError("'base' is reserved")
+        self._kinds[name] = "dep"
+        self._attached[name] = True
+        if state is not None:
+            return self._mgr(name).snapshot(state, step=step)
+        return None
+
+    def detach(self, name: str) -> None:
+        """Detach (keeps snapshots — a re-attach later resumes the task)."""
+        if not self._attached.get(name):
+            raise KeyError(f"disk {name!r} not attached")
+        self._attached[name] = False
+
+    def snapshot_disk(self, name: str, state, *, step: int,
+                      aux: Optional[dict] = None) -> SnapshotInfo:
+        if not self._attached.get(name):
+            raise KeyError(f"disk {name!r} not attached")
+        info = self._mgr(name).snapshot(state, step=step, aux=aux)
+        self.gc_all()
+        return info
+
+    def restore_disk(self, name: str, *, target_tree=None, shardings=None,
+                     snapshot_id: Optional[str] = None):
+        return self._mgr(name).restore(snapshot_id, target_tree=target_tree,
+                                       shardings=shardings)
+
+    def swap_task(self, old: str, new: str, state: Any = None):
+        """Switch projects: detach one DepDisk, attach another — the base
+        disk is untouched (no re-download of the 'VM image')."""
+        if self._attached.get(old):
+            self.detach(old)
+        return self.attach_dep(new, state)
+
+    # ------------------------------------------------------------------
+    def disks(self) -> list[DiskInfo]:
+        out = []
+        for name, kind in self._kinds.items():
+            mgr = self._managers.get(name)
+            latest = mgr.manifests.get(mgr.latest()) if mgr and mgr.latest() \
+                else None
+            logical = 0
+            if latest is not None:
+                for ent in latest.tensors.values():
+                    import numpy as np
+                    n = 1
+                    for d in ent.shape:
+                        n *= d
+                    logical += n * np.dtype(ent.dtype).itemsize
+            out.append(DiskInfo(name, kind, self._attached.get(name, False),
+                                len(mgr.order) if mgr else 0, logical))
+        return out
+
+    def gc_all(self) -> int:
+        """Mark live chunks across ALL disks, sweep the shared store."""
+        live: set[str] = set()
+        for mgr in self._managers.values():
+            for man in mgr.manifests.values():
+                for ent in man.tensors.values():
+                    live.update(ent.hashes)
+        return self.store.gc(live)

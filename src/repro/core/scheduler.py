@@ -1,0 +1,222 @@
+"""Volunteer work-unit scheduler (paper §II/§IV-C semantics).
+
+BOINC's server distributes work units to untrusted, unreliable volunteers.
+Production mechanics implemented here:
+
+* leases with deadlines — a unit not reported by its deadline is re-issued;
+* replication factor R + **quorum validation**: a unit is only accepted when
+  ``quorum`` identical results arrive (results are hashes of deterministic
+  computation, so agreement is bitwise — BOINC's validator);
+* **exponential back-off**: a client whose request is rejected (server busy /
+  no work) must wait 2^k * base seconds, protecting the server from request
+  storms (paper §IV-C);
+* **straggler mitigation**: when a unit's lease is mostly elapsed and spare
+  capacity exists, a duplicate is dispatched and the first valid result wins;
+* elastic membership: workers join/leave at any time; deterministic work
+  units (data/pipeline.py) mean any replacement volunteer reproduces the
+  exact result.
+
+The scheduler is pure bookkeeping (no jax): the elastic trainer drives it
+with real train-step executions.  ``tasks_per_day_capacity`` feeds the
+paper's 8.8 M-tasks/day server-throughput comparison.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+class SimClock:
+    """Deterministic clock for simulation/tests (advanced by the driver)."""
+
+    def __init__(self, t0: float = 0.0):
+        self.t = t0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> float:
+        self.t += dt
+        return self.t
+
+
+@dataclass
+class WorkUnit:
+    unit_id: int
+    payload: dict                      # e.g. {"batch_index": i, "step": s}
+    replication: int = 1
+    quorum: int = 1
+    deadline_s: float = 60.0
+    max_extra_results: int = 4         # replica escalation cap (BOINC's
+                                       # max_error_results analogue)
+    # runtime bookkeeping
+    results: Dict[str, str] = field(default_factory=dict)   # worker -> hash
+    leases: Dict[str, float] = field(default_factory=dict)  # worker -> t0
+    completed: bool = False
+    canonical: Optional[str] = None    # winning result hash
+    reissues: int = 0
+
+    def quorum_met(self) -> bool:
+        counts: Dict[str, int] = {}
+        for h in self.results.values():
+            counts[h] = counts.get(h, 0) + 1
+        for h, c in counts.items():
+            if c >= self.quorum:
+                self.canonical = h
+                return True
+        return False
+
+
+@dataclass
+class WorkerInfo:
+    worker_id: str
+    joined: float
+    backoff_until: float = 0.0
+    backoff_k: int = 0
+    credit: float = 0.0          # beyond-paper: the credit system V-BOINC defers
+    completed: int = 0
+    invalid: int = 0
+    alive: bool = True
+
+
+class VolunteerScheduler:
+    def __init__(self, *, replication: int = 1, quorum: int = 1,
+                 deadline_s: float = 60.0, backoff_base_s: float = 0.5,
+                 backoff_max_s: float = 60.0, straggler_factor: float = 0.8,
+                 max_extra_results: int = 4, clock=time.time):
+        assert quorum <= replication
+        self.replication = replication
+        self.quorum = quorum
+        self.max_extra_results = max_extra_results
+        self.deadline_s = deadline_s
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.straggler_factor = straggler_factor
+        self.clock = clock
+        self.units: Dict[int, WorkUnit] = {}
+        self.workers: Dict[str, WorkerInfo] = {}
+        self.stats = {"dispatched": 0, "completed": 0, "reissued": 0,
+                      "duplicates": 0, "rejected_requests": 0,
+                      "invalid_results": 0, "dropped_leases": 0}
+
+    # ---------------- membership (elastic) ----------------
+    def join(self, worker_id: str) -> WorkerInfo:
+        info = self.workers.get(worker_id)
+        if info is None or not info.alive:
+            info = WorkerInfo(worker_id, self.clock())
+            self.workers[worker_id] = info
+        return info
+
+    def leave(self, worker_id: str) -> None:
+        info = self.workers.get(worker_id)
+        if info is not None:
+            info.alive = False
+        # drop leases so units re-issue immediately
+        for unit in self.units.values():
+            if worker_id in unit.leases and not unit.completed:
+                del unit.leases[worker_id]
+                self.stats["dropped_leases"] += 1
+
+    # ---------------- unit lifecycle ----------------
+    def submit(self, unit_id: int, payload: dict, *,
+               replication: Optional[int] = None,
+               quorum: Optional[int] = None) -> WorkUnit:
+        wu = WorkUnit(unit_id, payload,
+                      replication=replication or self.replication,
+                      quorum=quorum or self.quorum,
+                      deadline_s=self.deadline_s,
+                      max_extra_results=self.max_extra_results)
+        self.units[unit_id] = wu
+        return wu
+
+    def _assignable(self, wu: WorkUnit, worker_id: str, now: float) -> bool:
+        if wu.completed or worker_id in wu.results or worker_id in wu.leases:
+            return False
+        active = len(wu.leases) + len(wu.results)
+        if active < wu.replication:
+            return True
+        # replica escalation: validation inconclusive (e.g. a corrupt result
+        # broke the quorum) and nobody is working on it -> issue another copy
+        if (not wu.leases and not wu.quorum_met()
+                and len(wu.results) < wu.replication + wu.max_extra_results):
+            return True
+        # straggler duplicate: lease mostly elapsed, no result yet
+        if not wu.results and wu.leases:
+            oldest = min(wu.leases.values())
+            if now - oldest > self.straggler_factor * wu.deadline_s:
+                return True
+        return False
+
+    def request_work(self, worker_id: str) -> Optional[WorkUnit]:
+        """A volunteer asks for work (may be told to back off)."""
+        now = self.clock()
+        info = self.join(worker_id)
+        if now < info.backoff_until:
+            self.stats["rejected_requests"] += 1
+            return None
+        self._expire_leases(now)
+        for wu in self.units.values():
+            if self._assignable(wu, worker_id, now):
+                dup = bool(wu.leases) or bool(wu.results)
+                wu.leases[worker_id] = now
+                self.stats["dispatched"] += 1
+                if dup and len(wu.leases) + len(wu.results) > wu.replication:
+                    self.stats["duplicates"] += 1
+                info.backoff_k = 0          # success resets back-off
+                info.backoff_until = 0.0
+                return wu
+        # no work: exponential back-off (paper §IV-C)
+        info.backoff_k = min(info.backoff_k + 1, 12)
+        delay = min(self.backoff_base_s * (2 ** info.backoff_k),
+                    self.backoff_max_s)
+        info.backoff_until = now + delay
+        self.stats["rejected_requests"] += 1
+        return None
+
+    def report(self, worker_id: str, unit_id: int, result_hash: str) -> bool:
+        """Validator path: accept when ``quorum`` identical hashes exist."""
+        wu = self.units.get(unit_id)
+        if wu is None or wu.completed:
+            return False
+        wu.leases.pop(worker_id, None)
+        wu.results[worker_id] = result_hash
+        if wu.quorum_met():
+            wu.completed = True
+            self.stats["completed"] += 1
+            for wid, h in wu.results.items():
+                info = self.workers.get(wid)
+                if info is None:
+                    continue
+                if h == wu.canonical:
+                    info.completed += 1
+                    info.credit += 1.0 / max(
+                        1, sum(1 for x in wu.results.values()
+                               if x == wu.canonical))
+                else:
+                    info.invalid += 1
+                    self.stats["invalid_results"] += 1
+            return True
+        return False
+
+    def _expire_leases(self, now: float) -> None:
+        for wu in self.units.values():
+            if wu.completed:
+                continue
+            expired = [w for w, t0 in wu.leases.items()
+                       if now - t0 > wu.deadline_s]
+            for w in expired:
+                del wu.leases[w]
+                wu.reissues += 1
+                self.stats["reissued"] += 1
+
+    # ---------------- progress ----------------
+    def pending(self) -> List[WorkUnit]:
+        return [u for u in self.units.values() if not u.completed]
+
+    def done(self) -> bool:
+        return all(u.completed for u in self.units.values())
+
+    def canonical_results(self) -> Dict[int, str]:
+        return {uid: u.canonical for uid, u in self.units.items()
+                if u.completed}

@@ -1,0 +1,93 @@
+"""V-BOINC project server (paper Fig. 1 flow).
+
+Distributes *capsules* ("VM images") instead of scientific applications, and
+answers DepDisk probes: the V-BOINC client asks whether a project has
+dependencies (1.1), downloads the DepDisk if so, otherwise creates a fresh
+one locally (3).  Transfer accounting reproduces the paper's bandwidth story
+(207 MB compressed image / ~3 min at 9 Mbps → bytes-moved metrics here, with
+chunk dedup meaning a re-attach moves only missing chunks).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.core.capsule import CapsuleSpec
+from repro.core.chunkstore import ChunkStore
+from repro.core.scheduler import VolunteerScheduler
+
+
+@dataclass
+class Project:
+    name: str
+    capsule: CapsuleSpec
+    dep_manifest: Optional[dict] = None      # None = no dependencies
+    scheduler: VolunteerScheduler = field(
+        default_factory=VolunteerScheduler)
+
+
+@dataclass
+class TransferLog:
+    bytes_out: int = 0
+    bytes_dedup: int = 0
+    requests: int = 0
+
+
+class VBoincServer:
+    """Registry + distribution endpoint ("modified BOINC server")."""
+
+    def __init__(self, store: ChunkStore):
+        self.store = store
+        self.projects: Dict[str, Project] = {}
+        self.transfers: Dict[str, TransferLog] = {}
+        self.account_keys: Dict[str, str] = {}    # weak account keys
+
+    def publish(self, project: Project) -> None:
+        self.projects[project.name] = project
+
+    def register_user(self, user: str) -> str:
+        key = f"weak-{hash(user) & 0xffffffff:08x}"
+        self.account_keys[user] = key
+        return key
+
+    # ---- Fig. 1 steps -------------------------------------------------
+    def probe_dependencies(self, project: str) -> Optional[dict]:
+        """(1.1) does the project need a DepDisk?"""
+        return self.projects[project].dep_manifest
+
+    def fetch_capsule(self, project: str, client_hashes: set[str],
+                      account_key: str) -> tuple[CapsuleSpec, list[str], int]:
+        """(2) download the capsule; only chunks the client lacks move.
+
+        Returns (spec, missing chunk hashes, bytes transferred)."""
+        if account_key not in self.account_keys.values():
+            raise PermissionError("unknown account key")
+        proj = self.projects[project]
+        log = self.transfers.setdefault(project, TransferLog())
+        log.requests += 1
+        # capsule payload chunks = manifest hash (specs are tiny; any model
+        # weights ride the chunk store like DepDisks)
+        needed = [proj.capsule.manifest_hash]
+        missing = [h for h in needed if h not in client_hashes]
+        moved = sum(len(h) for h in missing)   # manifest bytes (demo scale)
+        log.bytes_out += moved
+        log.bytes_dedup += sum(len(h) for h in needed) - moved
+        return proj.capsule, missing, moved
+
+    def request_work(self, project: str, worker_id: str):
+        """(5)/(6) the inner client pulls jobs straight from the server."""
+        return self.projects[project].scheduler.request_work(worker_id)
+
+    def report_result(self, project: str, worker_id: str, unit_id: int,
+                      result_hash: str) -> bool:
+        """(7) results go back directly; server-side quorum validation."""
+        return self.projects[project].scheduler.report(
+            worker_id, unit_id, result_hash)
+
+    # ---- §IV-C capacity -----------------------------------------------
+    def tasks_per_day_capacity(self, dispatch_us: float,
+                               validate_us: float) -> float:
+        """Derived server capacity from measured per-op costs."""
+        per_task_s = (dispatch_us + validate_us) / 1e6
+        return 86_400.0 / per_task_s

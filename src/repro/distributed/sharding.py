@@ -1,0 +1,214 @@
+"""Logical-axis sharding resolver.
+
+Every tensor in the system (params, optimizer state, activations, caches)
+carries *logical* axis names.  A rule table maps logical axes to mesh axes;
+the resolver emits a ``PartitionSpec`` per tensor, sharding a dim only when
+its size is divisible by the mesh-axis extent (else it replicates and logs —
+DESIGN.md §4: e.g. qwen2's 12 heads or 8 KV heads on a model=16 axis).
+
+This is how one capsule ("VM image") runs unmodified on any volunteer mesh:
+the sharding is resolved per-topology at attach time, never baked into the
+model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+logger = logging.getLogger("repro.sharding")
+
+MeshAxes = Union[str, Tuple[str, ...], None]
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    """Shape + dtype + logical axes for one tensor."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = np.float32
+    init: str = "normal"          # normal | zeros | ones | slow_decay (A_log)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# Default production rule table (DESIGN.md §5).
+#   embed   -> FSDP over the data axis (ZeRO-3 style weight sharding)
+#   heads/ff/vocab/experts/inner -> tensor parallel over the model axis
+#   batch   -> data parallel over (pod, data)
+#   cache_len -> model axis (decode KV caches whose head count doesn't divide)
+DEFAULT_RULES: dict[str, MeshAxes] = {
+    "batch": ("pod", "data"),
+    "embed": "data",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_ff": None,
+    "inner": "model",            # mamba d_inner
+    "state": None,
+    "seq": None,
+    "cache_len": "model",
+    "cache_heads": "model",
+    "conv": None,
+    "dt_rank": None,
+    # --- activation logical axes (distinct from param axes: the FSDP
+    # "embed" rule must NOT leak onto activations — GSPMD would otherwise
+    # shard activations on embed over the data axis and replicate batch,
+    # turning every matmul into a giant partial-sum all-reduce) ---
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_ff": "model",
+    "act_vocab": "model",
+    "act_inner": "model",
+}
+
+
+@dataclass
+class ShardingRules:
+    mesh: Mesh
+    rules: dict[str, MeshAxes] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    log_replications: bool = True
+
+    def _mesh_axes_for(self, logical: Optional[str]) -> Tuple[str, ...]:
+        if logical is None:
+            return ()
+        target = self.rules.get(logical)
+        if target is None:
+            return ()
+        if isinstance(target, str):
+            target = (target,)
+        return tuple(a for a in target if a in self.mesh.axis_names)
+
+    def spec_for(self, spec_or_axes, shape=None) -> P:
+        """PartitionSpec for a TensorSpec (or (axes, shape) pair)."""
+        if isinstance(spec_or_axes, TensorSpec):
+            axes, shape = spec_or_axes.axes, spec_or_axes.shape
+        else:
+            axes = spec_or_axes
+        assert shape is not None
+        parts: list = []
+        used: set[str] = set()
+        for dim, logical in zip(shape, axes):
+            mesh_axes = self._mesh_axes_for(logical)
+            # a mesh axis may appear at most once in a PartitionSpec
+            mesh_axes = tuple(a for a in mesh_axes if a not in used)
+            extent = int(np.prod([self.mesh.shape[a] for a in mesh_axes],
+                                 dtype=np.int64)) if mesh_axes else 1
+            if mesh_axes and dim % extent == 0 and dim > 0:
+                parts.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+                used.update(mesh_axes)
+            else:
+                if mesh_axes and self.log_replications:
+                    logger.info(
+                        "replicating dim %d (logical %r) on mesh axes %r "
+                        "(not divisible by %d)", dim, logical, mesh_axes, extent)
+                parts.append(None)
+        return P(*parts)
+
+    def sharding_for(self, spec: TensorSpec) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(spec))
+
+    def tree_shardings(self, spec_tree) -> Any:
+        """Map a pytree of TensorSpec to NamedShardings."""
+        return jax.tree.map(
+            self.sharding_for, spec_tree,
+            is_leaf=lambda x: isinstance(x, TensorSpec))
+
+    def tree_pspecs(self, spec_tree) -> Any:
+        return jax.tree.map(
+            self.spec_for, spec_tree,
+            is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def abstract_tree(spec_tree, rules: Optional[ShardingRules] = None):
+    """TensorSpec tree -> ShapeDtypeStruct tree (no allocation; dry-run)."""
+    def mk(s: TensorSpec):
+        sharding = rules.sharding_for(s) if rules is not None else None
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sharding)
+    return jax.tree.map(mk, spec_tree,
+                        is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def init_tree(spec_tree, rng: jax.Array, scale: float = 0.02):
+    """TensorSpec tree -> concrete arrays (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, TensorSpec))
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, s in zip(keys, leaves):
+        if s.init == "zeros":
+            out.append(jax.numpy.zeros(s.shape, s.dtype))
+        elif s.init == "ones":
+            out.append(jax.numpy.ones(s.shape, s.dtype))
+        elif s.init == "slow_decay":   # mamba A_log init: log(1..d_state)
+            import jax.numpy as jnp
+            a = jnp.tile(jnp.arange(1, s.shape[-1] + 1, dtype=s.dtype),
+                         s.shape[:-1] + (1,)).reshape(s.shape)
+            out.append(jnp.log(a))
+        else:
+            fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[-1], 1)
+            std = min(scale, (1.0 / max(fan_in, 1)) ** 0.5)
+            out.append(std * jax.random.normal(key, s.shape, s.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Activation-constraint context: model code calls ``constrain(x, axes)`` with
+# logical axis names; the active ShardingRules (set by the launcher while
+# tracing) resolve them to the current mesh.  Outside any context (CPU smoke
+# tests) constrain() is the identity, keeping model code mesh-agnostic.
+# ---------------------------------------------------------------------------
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional["ShardingRules"]):
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def current_rules() -> Optional["ShardingRules"]:
+    return getattr(_TLS, "rules", None)
+
+
+def constrain(x, axes: Sequence[Optional[str]]):
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = rules.spec_for(tuple(axes), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def stack_specs(spec_tree, n: int, axis_name: Optional[str] = None):
+    """Prepend a stacking dim (e.g. layers for lax.scan) to every spec."""
+    def st(s: TensorSpec):
+        return TensorSpec((n,) + s.shape, (axis_name,) + s.axes, s.dtype, s.init)
+    return jax.tree.map(st, spec_tree,
+                        is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def param_bytes(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, TensorSpec))
+    return sum(int(np.prod(s.shape)) * np.dtype(s.dtype).itemsize
+               for s in leaves)

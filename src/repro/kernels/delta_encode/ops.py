@@ -1,0 +1,36 @@
+"""Jit'd wrapper + host-side compaction for differencing snapshots.
+
+``diff_blocks`` returns only the changed tiles (+bitmap) — what the snapshot
+manager would upload; ``patch_blocks`` reverses it.  numpy fallback mirrors
+the kernel exactly (used on hosts without a TPU runtime).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.delta_encode.kernel import (TILE, delta_apply,
+                                               delta_encode)
+from repro.kernels.delta_encode.ref import delta_apply_ref, delta_encode_ref
+
+
+def diff_blocks(old, new, *, mode: str = "interpret"):
+    """-> (changed_tiles (k, 8, 1024) i32, bitmap (nblk,), orig_count)."""
+    if mode == "ref":
+        delta, changed = delta_encode_ref(old, new)
+        n = np.asarray(old).size
+    else:
+        delta, changed, n = delta_encode(old, new,
+                                         interpret=(mode == "interpret"))
+        delta, changed = np.asarray(delta), np.asarray(changed)
+    mask = changed.astype(bool)
+    return delta[mask], changed, int(np.asarray(n))
+
+
+def patch_blocks(old, changed_tiles, bitmap, *, mode: str = "interpret"):
+    """Rebuild ``new`` from ``old`` + compacted changed tiles."""
+    full = np.zeros((bitmap.size, 8, 1024), np.int32)
+    full[bitmap.astype(bool)] = np.asarray(changed_tiles)
+    if mode == "ref":
+        return delta_apply_ref(old, full)
+    out = delta_apply(old, full, interpret=(mode == "interpret"))
+    return np.asarray(out)

@@ -1,0 +1,24 @@
+"""Pure-numpy oracle for delta encode/apply (bit-level XOR semantics)."""
+from __future__ import annotations
+
+import numpy as np
+
+TILE = 8 * 1024
+
+
+def delta_encode_ref(old: np.ndarray, new: np.ndarray):
+    o = np.asarray(old).reshape(-1).view(np.uint8)
+    n = np.asarray(new).reshape(-1).view(np.uint8)
+    pad = (-o.size) % (TILE * 4)
+    o = np.pad(o, (0, pad))
+    n = np.pad(n, (0, pad))
+    d = (o ^ n).view(np.int32).reshape(-1, 8, 1024)
+    changed = np.any(d != 0, axis=(1, 2)).astype(np.int32)
+    return d, changed
+
+
+def delta_apply_ref(old: np.ndarray, delta: np.ndarray) -> np.ndarray:
+    o = np.asarray(old)
+    ob = o.reshape(-1).view(np.uint8)
+    db = np.asarray(delta).reshape(-1).view(np.uint8)[:ob.size]
+    return (ob ^ db).view(o.dtype).reshape(o.shape)

@@ -1,0 +1,122 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+Grid (B, H, nQ, nK) with the KV dim innermost-sequential; online-softmax
+running max / denominator / accumulator live in VMEM scratch across the KV
+sweep.  GQA needs no materialized head repeat: the K/V BlockSpec index maps
+divide the query-head index by the group size, so each (b, h) program pulls
+its group's KV tile straight from HBM.
+
+Block shapes default to (128, head_dim) — MXU-aligned (multiples of 128 on
+the matmul dims) and well inside VMEM:
+    q(128, hd) + k(128, hd) + v(128, hd) + acc(128, hd) + scores(128, 128)
+    ≈ 5 * 128*128*4 B ≈ 320 KiB  «  16 MiB VMEM.
+Causal masking skips fully-masked KV tiles via ``pl.when`` (no FLOPs, no
+VMEM traffic for the matmuls).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, block_q: int, block_k: int,
+                 n_k: int, s_valid: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: tile is live iff some k-pos <= some q-pos
+    live = True
+    if causal:
+        live = kj * block_k <= qi * block_q + block_q - 1
+
+    @pl.when(live)
+    def _tile():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        rq = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        rk = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        if causal:
+            s = jnp.where(rk <= rq, s, NEG_INF)
+        if s_valid % block_k:   # mask zero-padded KV tail (non-causal path)
+            s = jnp.where(rk < s_valid, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret", "s_valid"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False,
+                    s_valid: int = 0) -> jax.Array:
+    """q: (B, H, T, hd);  k, v: (B, K, S, hd) with H % K == 0.
+
+    Returns (B, H, T, hd).  T % block_q == 0 and S % block_k == 0 required
+    (the ops wrapper pads and passes ``s_valid`` = original S).
+    """
+    b, h, t, hd = q.shape
+    _, kh, s, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    rep = h // kh
+    block_q = min(block_q, t)
+    block_k = min(block_k, s)
+    assert t % block_q == 0 and s % block_k == 0
+    n_q, n_k = t // block_q, s // block_k
+    scale = 1.0 / math.sqrt(hd)
+    s_valid = s_valid or s
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, n_k=n_k, s_valid=s_valid)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b_, h_, i, j: (b_, h_, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h_, i, j, rep=rep: (b_, h_ // rep, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b_, h_, i, j, rep=rep: (b_, h_ // rep, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b_, h_, i, j: (b_, h_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, t, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,46 @@
+"""Jit'd public wrapper: layout adaptation + padding + dispatch.
+
+Model code carries (B, T, H, hd); the kernel wants (B, H, T, hd) with
+block-aligned T/S.  ``attend`` pads, transposes, calls the kernel (interpret
+mode on CPU) and restores layout.  On non-TPU backends without interpret, it
+falls back to the jnp reference — one call site, three execution modes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, *,
+           causal: bool = True, block_q: int = 128, block_k: int = 128,
+           mode: str = "interpret") -> jax.Array:
+    """q: (B,T,H,hd); k,v: (B,S,K,hd) -> (B,T,H,hd).
+
+    mode: "tpu" (compiled pallas) | "interpret" | "ref".
+    """
+    if mode == "ref":
+        out = attention_ref(q.transpose(0, 2, 1, 3),
+                            k.transpose(0, 2, 1, 3),
+                            v.transpose(0, 2, 1, 3), causal=causal)
+        return out.transpose(0, 2, 1, 3)
+    t, s = q.shape[1], k.shape[1]
+    qt = _pad_to(q.transpose(0, 2, 1, 3), 2, block_q)
+    kt = _pad_to(k.transpose(0, 2, 1, 3), 2, block_k)
+    vt = _pad_to(v.transpose(0, 2, 1, 3), 2, block_k)
+    out = flash_attention(qt, kt, vt, causal=causal, block_q=block_q,
+                          block_k=block_k, interpret=(mode == "interpret"),
+                          s_valid=s)
+    return out[:, :, :t].transpose(0, 2, 1, 3)

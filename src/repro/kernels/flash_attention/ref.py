@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B,H,T,hd); k,v: (B,K,S,hd).  Naive full-softmax reference."""
+    b, h, t, hd = q.shape
+    kh = k.shape[1]
+    rep = h // kh
+    k = jnp.repeat(k, rep, axis=1)
+    v = jnp.repeat(v, rep, axis=1)
+    s = jnp.einsum("bhtd,bhsd->bhts", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        tq = jnp.arange(t)[:, None]
+        ts = jnp.arange(k.shape[2])[None, :]
+        s = jnp.where(ts <= tq, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

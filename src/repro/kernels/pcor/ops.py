@@ -1,0 +1,38 @@
+"""Jit'd wrapper for pcor with mode dispatch + row-sharded variant.
+
+``pcor_sharded`` mirrors SPRINT's MPI row partitioning: each worker owns a
+row strip and computes its strip of the correlation matrix — the work-unit
+payload used by the Fig-4 benchmark when run under the volunteer scheduler.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.pcor.kernel import pcor
+from repro.kernels.pcor.ref import pcor_ref
+
+
+def correlate(x: jax.Array, *, block_g: int = 128,
+              mode: str = "interpret") -> jax.Array:
+    if mode == "ref":
+        return pcor_ref(x)
+    return pcor(x, block_g=block_g, interpret=(mode == "interpret"))
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def pcor_strip(x: jax.Array, row_start, row_count: int) -> jax.Array:
+    """One worker's strip: rows [row_start, row_start+row_count) vs all."""
+    import jax.numpy as jnp
+    x = x.astype(jnp.float32)
+
+    def z(m):
+        mc = m - m.mean(axis=1, keepdims=True)
+        n = jnp.sqrt(jnp.sum(mc * mc, axis=1, keepdims=True))
+        return mc / jnp.maximum(n, 1e-30)
+
+    zx = z(x)
+    zs = jax.lax.dynamic_slice_in_dim(zx, row_start, row_count, axis=0)
+    return zs @ zx.T

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for pcor — and the 'serial R cor()' baseline the paper
+compares against (Fig. 4 Load/Exec)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pcor_ref(x: jax.Array) -> jax.Array:
+    """x: (G, S) -> (G, G) Pearson correlation of rows."""
+    x = x.astype(jnp.float32)
+    xc = x - x.mean(axis=1, keepdims=True)
+    norm = jnp.sqrt(jnp.sum(xc * xc, axis=1, keepdims=True))
+    z = xc / jnp.maximum(norm, 1e-30)
+    return z @ z.T

@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the selective-scan kernel: padding + mode dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+def selective_scan(x: jax.Array, dt: jax.Array, bm: jax.Array, cm: jax.Array,
+                   a: jax.Array, *, block_t: int = 32, block_di: int = 128,
+                   mode: str = "interpret") -> jax.Array:
+    """x, dt: (B,T,Di); bm, cm: (B,T,N); a: (Di,N) -> (B,T,Di)."""
+    if mode == "ref":
+        return ssm_scan_ref(x, dt, bm, cm, a)
+    b, t, di = x.shape
+    pt = (-t) % min(block_t, t)
+    pd = (-di) % min(block_di, di)
+    if pt or pd:
+        # dt=0 on padded steps -> abar=1, bx=0: exact identity transitions
+        x = jnp.pad(x, ((0, 0), (0, pt), (0, pd)))
+        dt = jnp.pad(dt, ((0, 0), (0, pt), (0, pd)))
+        bm = jnp.pad(bm, ((0, 0), (0, pt), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pt), (0, 0)))
+        a = jnp.pad(a, ((0, pd), (0, 0)))
+    y = ssm_scan(x, dt, bm, cm, a, block_t=block_t, block_di=block_di,
+                 interpret=(mode == "interpret"))
+    return y[:, :t, :di]

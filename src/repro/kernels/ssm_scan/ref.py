@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the selective-scan kernel: plain sequential loop."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x: jax.Array, dt: jax.Array, bm: jax.Array, cm: jax.Array,
+                 a: jax.Array) -> jax.Array:
+    """x, dt: (B,T,Di); bm, cm: (B,T,N); a: (Di,N) -> y (B,T,Di)."""
+    b, t, di = x.shape
+    n = bm.shape[-1]
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        abar = jnp.exp(dtt[:, :, None] * a[None])          # (B,Di,N)
+        h = abar * h + (dtt * xt)[:, :, None] * bt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          bm.swapaxes(0, 1).astype(jnp.float32),
+          cm.swapaxes(0, 1).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype)

@@ -1,0 +1,384 @@
+"""Roofline-term extraction from compiled XLA artifacts.
+
+CPU-backend caveat discovered empirically (see EXPERIMENTS.md §Dry-run):
+``compiled.cost_analysis()`` counts ``while`` bodies ONCE, so any scan-based
+model (all of ours) is undercounted by ~n_layers.  We therefore derive the
+terms structurally, multiplying by loop trip counts:
+
+* FLOPs — parsed from the *lowered* StableHLO (operand types are explicit
+  there), summing ``dot_general`` costs with a multiplier stack maintained
+  across ``stablehlo.while`` regions (trip count = the loop bound constant in
+  the cond region) and ``func.call`` edges.  Pre-SPMD global FLOPs; divided
+  by device count for the per-device term.  Rematerialization duplicates are
+  visible at this level, so MODEL_FLOPS/HLO_FLOPs honestly exposes remat and
+  dispatch waste.
+
+* Collective bytes — parsed from the *compiled* (post-SPMD) HLO, where
+  GSPMD's collectives exist.  Operands are printed untyped, so byte counts
+  come from output shapes with ring-model wire costs:
+
+      all-reduce          2*(g-1)/g * S_out
+      all-gather          (g-1)/g   * S_out
+      reduce-scatter      (g-1)     * S_out
+      all-to-all          (g-1)/g   * S_out
+      collective-permute  S_out
+
+  (g = group size from replica_groups) multiplied through the while-loop
+  call graph exactly like FLOPs.
+
+* HBM bytes — analytic inventory (launch/costmodel.py): cost_analysis bytes
+  suffer the same trip-count issue and CPU fusion differs from TPU anyway.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+from repro.launch import mesh as mesh_mod
+
+# ---------------------------------------------------------------------------
+# StableHLO FLOPs (trip-count aware)
+# ---------------------------------------------------------------------------
+_FUNC_RE = re.compile(r"func\.func\s+(?:public|private)?\s*@([\w.$-]+)")
+_CALL_RE = re.compile(r"func\.call\s+@([\w.$-]+)")
+_DENSE_INT_RE = re.compile(r"dense<(\d+)>")
+_DOT_RE = re.compile(
+    r"stablehlo\.dot_general\s.*?"
+    r"(?:contracting_dims\s*=\s*\[([\d, ]*)\]\s*x\s*\[[\d, ]*\])"
+    r".*?:\s*\(tensor<([^>]+)>,\s*tensor<([^>]+)>\)\s*->\s*tensor<([^>]+)>")
+_CONV_RE = re.compile(
+    r"stablehlo\.convolution.*?:\s*\(tensor<([^>]+)>,\s*tensor<([^>]+)>\)"
+    r"\s*->\s*tensor<([^>]+)>")
+
+
+def _tensor_dims(t: str) -> list[int]:
+    return [int(d) for d in t.split("x")[:-1] if d.isdigit()]
+
+
+def _tensor_numel(t: str) -> int:
+    n = 1
+    for d in _tensor_dims(t):
+        n *= d
+    return n
+
+
+def _dot_flops(line: str) -> float:
+    m = _DOT_RE.search(line)
+    if not m:
+        return 0.0
+    cdims = [int(x) for x in m.group(1).replace(" ", "").split(",") if x]
+    lhs = _tensor_dims(m.group(2))
+    out_numel = _tensor_numel(m.group(4))
+    k = 1
+    for c in cdims:
+        if c < len(lhs):
+            k *= lhs[c]
+    return 2.0 * out_numel * k
+
+
+@dataclass
+class _Fn:
+    flops: float = 0.0
+    calls: dict = field(default_factory=dict)   # callee -> multiplier
+
+
+def stablehlo_flops(text: str) -> float:
+    """Global matmul FLOPs of a lowered module, while-trip aware."""
+    fns: dict[str, _Fn] = {}
+    cur: Optional[_Fn] = None
+    # stack entries: ("while_pending", trip) | ("scale", factor) | ("brace",)
+    scale = 1.0
+    stack: list[tuple] = []
+    pending_trip: Optional[list] = None   # collecting cond-region constants
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        fm = _FUNC_RE.search(line)
+        if fm and "func.func" in line:
+            cur = fns.setdefault(fm.group(1), _Fn())
+            scale, stack, pending_trip = 1.0, [], None
+        if cur is None:
+            continue
+        if "stablehlo.while" in line:
+            # next `cond { ... }` region holds the bound
+            pending_trip = []
+        if pending_trip is not None:
+            for c in _DENSE_INT_RE.findall(line):
+                pending_trip.append(int(c))
+        opens = raw.count("{") - raw.count("}")
+        if line.startswith("} do {") or line == "do {" or line.endswith("} do {"):
+            trip = max(pending_trip) if pending_trip else 1
+            pending_trip = None
+            stack.append(("scale", trip))
+            scale *= max(trip, 1)
+            continue
+        if "stablehlo.dot_general" in line:
+            cur.flops += scale * _dot_flops(line)
+        elif "func.call" in line:
+            cm = _CALL_RE.search(line)
+            if cm:
+                cur.calls[cm.group(1)] = cur.calls.get(cm.group(1), 0) + scale
+        # brace tracking (after content processing)
+        for _ in range(max(opens, 0)):
+            stack.append(("brace",))
+        for _ in range(max(-opens, 0)):
+            if stack:
+                kind = stack.pop()
+                if kind[0] == "scale":
+                    scale /= max(kind[1], 1)
+
+    # resolve call graph from main
+    memo: dict[str, float] = {}
+
+    def total(name: str, depth=0) -> float:
+        if name in memo or depth > 50:
+            return memo.get(name, 0.0)
+        fn = fns.get(name)
+        if fn is None:
+            return 0.0
+        t = fn.flops + sum(mult * total(callee, depth + 1)
+                           for callee, mult in fn.calls.items())
+        memo[name] = t
+        return t
+
+    if "main" in fns:
+        return total("main")
+    return sum(total(n) for n in fns)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-HLO collectives (trip-count aware)
+# ---------------------------------------------------------------------------
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-_]+)\s+\(.*->")
+_COLL_OP_RE = re.compile(
+    r"=\s*(.*?)\s(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-_]+),\s*body=%?([\w.\-_]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes_list(segment: str) -> int:
+    n = 0
+    for dt, dims in _SHAPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        for d in dims.split(","):
+            if d:
+                numel *= int(d)
+        n += numel * _DTYPE_BYTES[dt]
+    return n
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    return default
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+@dataclass
+class CollectiveStats:
+    op_counts: dict = field(default_factory=dict)    # static op -> dynamic count
+    op_bytes: dict = field(default_factory=dict)     # output bytes (dynamic)
+    wire_bytes_per_device: float = 0.0
+
+    @property
+    def total_output_bytes(self) -> float:
+        return sum(self.op_bytes.values())
+
+    def seconds(self, link_bw: float = mesh_mod.ICI_BW_PER_LINK) -> float:
+        return self.wire_bytes_per_device / link_bw
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    # 1) split into computations
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if not line.startswith(" "):  # computation header at col 0
+            m = _COMP_RE.match(line.replace("ENTRY ", ""))
+            if "ENTRY" in line:
+                m = _COMP_RE.match(line[line.index("ENTRY") + 6:].strip())
+                cur = "__entry__"
+                comps[cur] = []
+                continue
+            if m and "{" in line:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+
+    if "__entry__" not in comps:  # fallback: treat whole text as one comp
+        comps["__entry__"] = hlo_text.splitlines()
+
+    # 2) per-computation collectives + while edges
+    class CompInfo:
+        def __init__(self):
+            self.colls: list[tuple[str, int, int]] = []   # (op, bytes, g)
+            self.whiles: list[tuple[str, str]] = []       # (cond, body)
+    infos: dict[str, CompInfo] = {}
+    for name, lines in comps.items():
+        info = CompInfo()
+        for line in lines:
+            cm = _COLL_OP_RE.search(line)
+            if cm:
+                nbytes = _shape_bytes_list(cm.group(1))
+                g = _group_size(line, n_devices)
+                if nbytes and g > 1:
+                    info.colls.append((cm.group(2), nbytes, g))
+            wm = _WHILE_RE.search(line)
+            if wm:
+                info.whiles.append((wm.group(1), wm.group(2)))
+        infos[name] = info
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, []):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max(consts) if consts else 1
+
+    # 3) BFS multiplier propagation from entry
+    mult: dict[str, float] = {"__entry__": 1.0}
+    work = ["__entry__"]
+    seen_edges = set()
+    while work:
+        name = work.pop()
+        info = infos.get(name)
+        if not info:
+            continue
+        for cond, body in info.whiles:
+            t = trip_count(cond)
+            key = (name, body)
+            if key in seen_edges:
+                continue
+            seen_edges.add(key)
+            mult[body] = mult.get(body, 0.0) + mult[name] * t
+            work.append(body)
+
+    stats = CollectiveStats()
+    for name, info in infos.items():
+        m = mult.get(name, 0.0)
+        if m <= 0 or not info.colls:
+            continue
+        for op, nbytes, g in info.colls:
+            stats.op_counts[op] = stats.op_counts.get(op, 0) + m
+            stats.op_bytes[op] = stats.op_bytes.get(op, 0) + nbytes * m
+            stats.wire_bytes_per_device += _WIRE_FACTOR[op](g) * nbytes * m
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline
+# ---------------------------------------------------------------------------
+def cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca or {})
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "alias_size_in_bytes",
+              "temp_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float      # HLO-derived (global/chips)
+    hbm_bytes_per_device: float  # analytic inventory
+    coll: CollectiveStats
+    n_devices: int
+    model_flops_per_device: float = 0.0   # 6*N*D / chips
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / mesh_mod.PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / mesh_mod.HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll.seconds()
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops_per_device / self.flops_per_device
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of peak sustained if the dominant term were the runtime:
+        useful model FLOPs / (bound_s * peak)."""
+        if self.bound_s <= 0:
+            return 0.0
+        return self.model_flops_per_device / (
+            self.bound_s * mesh_mod.PEAK_FLOPS_BF16)
+
+    def summary(self) -> dict:
+        return {
+            "hlo_flops_per_device": self.flops_per_device,
+            "model_flops_per_device": self.model_flops_per_device,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_output_bytes": self.coll.total_output_bytes,
+            "collective_wire_bytes_per_device": self.coll.wire_bytes_per_device,
+            "collective_op_counts": dict(self.coll.op_counts),
+            "collective_op_bytes": dict(self.coll.op_bytes),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+            "roofline_fraction": self.roofline_fraction,
+        }

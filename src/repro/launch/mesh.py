@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module constant) so importing
+this module touches no jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init; everything else sees the container's single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW_PER_LINK = 50e9            # B/s (~50 GB/s/link)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Single-device mesh for CPU smoke tests and benchmarks."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_mesh_by_name(name: str):
+    if name == "single_pod":
+        return make_production_mesh(multi_pod=False)
+    if name == "multi_pod":
+        return make_production_mesh(multi_pod=True)
+    if name == "host":
+        return make_host_mesh()
+    raise ValueError(f"unknown mesh {name!r}")
+
+
+def chips(mesh) -> int:
+    return mesh.devices.size

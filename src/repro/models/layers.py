@@ -1,0 +1,175 @@
+"""Model primitives: norms, rotary, blocked attention, SwiGLU MLP.
+
+All functions are pure and operate on *global* (unsharded) shapes; GSPMD
+partitions them according to the sharding resolver's annotations.  Attention
+uses an online-softmax blocked formulation (the jnp twin of the Pallas
+flash-attention kernel in ``repro.kernels.flash_attention``) so that 32k+
+contexts never materialize a full (T, S) score matrix.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.sharding import TensorSpec, constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    # variance in f32, but x itself is NOT upcast: a whole-tensor convert
+    # here gets fused below the TP partial-sum all-reduces by XLA, doubling
+    # every collective's bytes (EXPERIMENTS.md §Perf cell B iter6).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * w.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ w_gate.astype(x.dtype)) * (x @ w_up.astype(x.dtype))
+    return h @ w_down.astype(x.dtype)
+
+
+def mlp_specs(d_model: int, d_ff: int) -> dict:
+    """SwiGLU params; embed dim FSDP-sharded, ff dim tensor-parallel."""
+    return {
+        "w_gate": TensorSpec((d_model, d_ff), ("embed", "ff")),
+        "w_up": TensorSpec((d_model, d_ff), ("embed", "ff")),
+        "w_down": TensorSpec((d_ff, d_model), ("ff", "embed")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rotary(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    hd = x.shape[-1]
+    freqs = theta ** (-jnp.arange(0, hd // 2, dtype=jnp.float32) / (hd // 2))
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (B, T, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """(B, S, K, hd) -> (B, S, K*n_rep, hd).  GSPMD slices the repeated head
+    dim locally when it is sharded, so no device materializes all heads."""
+    if n_rep == 1:
+        return k
+    b, s, kh, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, kh, n_rep, hd)) \
+              .reshape(b, s, kh * n_rep, hd)
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, q_offset=0,
+                      kv_len: Optional[jax.Array] = None,
+                      window: int = 0, block_kv: int = 1024,
+                      scale: Optional[float] = None) -> jax.Array:
+    """Online-softmax attention over KV blocks.
+
+    q: (B, T, H, hd);  k, v: (B, S, H, hd)  (already GQA-repeated).
+    ``q_offset``: absolute position of q[0] (decode / chunked prefill).
+    ``kv_len``: (B,) valid cache lengths (decode); None = all valid.
+    ``window``: sliding-window size (0 = full).
+    """
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_kv = min(block_kv, s)
+    if s % block_kv:
+        pad = block_kv - s % block_kv
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.full((b,), s, jnp.int32)
+        s = s + pad
+    nblk = s // block_kv
+
+    pos_q = q_offset + jnp.arange(t, dtype=jnp.int32)             # (T,)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        start = blk * block_kv
+        kb = lax.dynamic_slice_in_dim(k, start, block_kv, axis=1)
+        vb = lax.dynamic_slice_in_dim(v, start, block_kv, axis=1)
+        # inputs stay in compute dtype (bf16 collectives upstream); the MXU
+        # accumulates in f32 via preferred_element_type
+        scores = jnp.einsum("bthd,bshd->bhts", q, kb,
+                            preferred_element_type=jnp.float32) * scale
+        pos_k = start + jnp.arange(block_kv, dtype=jnp.int32)     # (Sb,)
+        mask = jnp.ones((t, block_kv), bool)
+        if causal:
+            mask &= pos_k[None, :] <= pos_q[:, None]
+        if window:
+            mask &= pos_k[None, :] > pos_q[:, None] - window
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        if kv_len is not None:
+            lmask = pos_k[None, :] < kv_len[:, None]              # (B,Sb)
+            scores = jnp.where(lmask[:, None, None, :], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(-1))                    # (B,H,T)
+        p = jnp.exp(scores - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhts,bshd->bhtd", p.astype(v.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, t), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, t), jnp.float32)
+    a0 = jnp.zeros((b, h, t, hd), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nblk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]                  # (B,H,T,hd)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)              # (B,T,H,hd)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                     kv_len: jax.Array, window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-step attention over a full cache (no blocking; scores are
+    (B, H, 1, S) which stays small even at 500k once S is mesh-sharded).
+
+    q: (B, 1, H, hd); caches: (B, S, H, hd) (GQA-repeated); kv_len: (B,).
+    """
+    b, t, h, hd = q.shape
+    s = k_cache.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k_cache,
+                        preferred_element_type=jnp.float32) * scale
+    # scores inherit the cache's len-sharding; softmax reduces over the
+    # sharded dim with tiny (B,H,T) collectives
+    scores = constrain(scores, ("act_batch", None, None, "cache_len"))
+    pos_k = jnp.arange(s, dtype=jnp.int32)
+    mask = pos_k[None, :] < kv_len[:, None]                       # (B,S)
+    if window:  # sliding-window: only the last `window` positions attend
+        mask &= pos_k[None, :] >= kv_len[:, None] - window
+    scores = jnp.where(mask[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          vocab_size: int) -> jax.Array:
+    """Mean CE per token; logits may be vocab-padded (padded cols masked)."""
+    padded = logits.shape[-1]
+    if padded != vocab_size:
+        col = jnp.arange(padded)
+        logits = jnp.where(col[None, None, :] < vocab_size, logits, NEG_INF)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)

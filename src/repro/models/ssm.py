@@ -1,0 +1,151 @@
+"""Mamba1 selective-SSM block (falcon-mamba / hymba SSM heads).
+
+Training/prefill uses a *chunked* scan: sequential ``lax.scan`` over time
+chunks carrying the (B, D_inner, N) state, with an associative scan inside
+each chunk — memory O(chunk) instead of O(T), and the jnp twin of the Pallas
+kernel in ``repro.kernels.ssm_scan``.  Decode is the O(1) recurrence update.
+
+TPU adaptation: the depthwise causal conv is expressed as a sum of shifted
+scaled copies (VPU-friendly; no im2col), and d_inner is tensor-parallel over
+the model axis (state dim N=16 stays local).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import TensorSpec
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array     # (B, d_conv-1, Di) last inputs for the causal conv
+    h: jax.Array        # (B, Di, N) recurrent state
+
+
+def ssm_specs(cfg: ArchConfig) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm.d_state
+    r, dc = cfg.dt_rank, cfg.ssm.d_conv
+    return {
+        "in_proj": TensorSpec((d, 2 * di), ("embed", "inner")),
+        "conv_w": TensorSpec((dc, di), ("conv", "inner")),
+        "conv_b": TensorSpec((di,), ("inner",), init="zeros"),
+        "x_proj": TensorSpec((di, r + 2 * n), ("inner", None)),
+        "dt_proj": TensorSpec((r, di), ("dt_rank", "inner")),
+        "dt_bias": TensorSpec((di,), ("inner",), init="ones"),
+        "A_log": TensorSpec((di, n), ("inner", "state"), init="slow_decay"),
+        "D": TensorSpec((di,), ("inner",), init="ones"),
+        "out_proj": TensorSpec((di, d), ("inner", "embed")),
+    }
+
+
+def ssm_cache_specs(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    di, n, dc = cfg.d_inner, cfg.ssm.d_state, cfg.ssm.d_conv
+    return SSMCache(
+        conv=TensorSpec((cfg.n_layers, batch, dc - 1, di),
+                        (None, "batch", None, "inner"), dtype),
+        h=TensorSpec((cfg.n_layers, batch, di, n),
+                     (None, "batch", "inner", "state"), dtype),
+    )
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d via shifted adds.  x: (B, T, Di); w: (dc, Di)."""
+    dc = w.shape[0]
+    out = x * w[-1].astype(x.dtype)
+    for i in range(1, dc):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i or None][:, :x.shape[1]]
+        out = out + shifted * w[dc - 1 - i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def _ssm_params(p: dict, xc: jax.Array, cfg: ArchConfig):
+    """Input-dependent (dt, B, C) + discretized (Abar, Bx)."""
+    n = cfg.ssm.d_state
+    r = cfg.dt_rank
+    dbc = xc.astype(jnp.float32) @ p["x_proj"].astype(jnp.float32)
+    dt, bm, cm = jnp.split(dbc, [r, r + n], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))      # (..., Di)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))                  # (Di, N)
+    abar = jnp.exp(dt[..., None] * a)                             # (..., Di, N)
+    bx = (dt * xc.astype(jnp.float32))[..., :, None] * bm[..., None, :]
+    return abar, bx, cm
+
+
+def ssm_train(p: dict, x: jax.Array, cfg: ArchConfig,
+              chunk: int = 256, return_state: bool = False):
+    """Full-sequence selective scan.  x: (B, T, D) -> (B, T, D).
+
+    With ``return_state`` also returns the final SSMCache (prefill)."""
+    b, t, _ = x.shape
+    di, n = cfg.d_inner, cfg.ssm.d_state
+    xz = x @ p["in_proj"].astype(x.dtype)                         # (B,T,2Di)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv(xr, p["conv_w"], p["conv_b"]))  # (B,T,Di)
+
+    chunk = min(chunk, t)
+    if t % chunk:  # pad time to a chunk multiple (masked by abar=1,bx=0)
+        pad = chunk - t % chunk
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+    else:
+        pad, xc_p = 0, xc
+    tt = xc_p.shape[1]
+    nchunk = tt // chunk
+
+    abar_full, bx_full, cm_full = _ssm_params(p, xc_p, cfg)
+    if pad:  # identity transition on padded steps so h_final stays exact
+        valid = (jnp.arange(tt) < t)[None, :, None, None]
+        abar_full = jnp.where(valid, abar_full, 1.0)
+        bx_full = jnp.where(valid, bx_full, 0.0)
+    # reshape to (nchunk, B, chunk, ...) for a sequential scan over chunks
+    def to_chunks(a):
+        return a.reshape(b, nchunk, chunk, *a.shape[2:]).swapaxes(0, 1)
+    abar_c, bx_c, cm_c = map(to_chunks, (abar_full, bx_full, cm_full))
+
+    def chunk_body(h, inputs):
+        abar, bx, cm = inputs                                     # (B,chunk,Di,N)
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        a_cum, b_cum = lax.associative_scan(combine, (abar, bx), axis=1)
+        hs = a_cum * h[:, None] + b_cum                           # (B,chunk,Di,N)
+        y = jnp.einsum("bcdn,bcn->bcd", hs, cm)                   # (B,chunk,Di)
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((b, di, n), jnp.float32)
+    h_final, ys = lax.scan(chunk_body, h0, (abar_c, bx_c, cm_c))
+    y = ys.swapaxes(0, 1).reshape(b, tt, di)[:, :t]
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if not return_state:
+        return out
+    dc = cfg.ssm.d_conv
+    conv_tail = jnp.pad(xr, ((0, 0), (dc - 1, 0), (0, 0)))[:, t:t + dc - 1]
+    # NOTE: padded tail positions (t % chunk != 0) were folded with bx=0 pads,
+    # but abar pads are exp(dt(0)*A) != 1 — mask below keeps h exact.
+    return out, SSMCache(conv=conv_tail.astype(jnp.float32), h=h_final)
+
+
+def ssm_decode(p: dict, x: jax.Array, cfg: ArchConfig,
+               cache: SSMCache) -> tuple[jax.Array, SSMCache]:
+    """One-token recurrence.  x: (B, 1, D)."""
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xr, z = jnp.split(xz, 2, axis=-1)                             # (B,1,Di)
+    # causal conv over [conv_state, x]
+    window = jnp.concatenate([cache.conv.astype(x.dtype), xr], axis=1)  # (B,dc,Di)
+    xc = jnp.einsum("bcd,cd->bd", window, p["conv_w"].astype(x.dtype)) \
+        + p["conv_b"].astype(x.dtype)
+    xc = jax.nn.silu(xc)[:, None]                                 # (B,1,Di)
+    abar, bx, cm = _ssm_params(p, xc, cfg)                        # (B,1,Di,N)
+    h = abar[:, 0] * cache.h + bx[:, 0]                           # (B,Di,N)
+    y = jnp.einsum("bdn,bn->bd", h, cm[:, 0])[:, None]            # (B,1,Di)
+    y = y + xc.astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, SSMCache(conv=window[:, 1:].astype(cache.conv.dtype), h=h)

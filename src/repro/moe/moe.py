@@ -1,0 +1,136 @@
+"""Mixture-of-Experts block (DeepSeekMoE / Qwen3-MoE style).
+
+TPU-native dispatch, two design decisions:
+
+* **Sort-based, FLOP-honest**: GShard one-hot dispatch einsums are memory-
+  hungry and count fake FLOPs (the roofline's useful-ratio would lie).  We
+  argsort (token, slot) pairs by expert id and *gather* into a dense
+  (B, E, C, D) buffer — zero matmul FLOPs in routing, real FLOPs only in
+  the expert matmuls.
+
+* **Grouped per-DP-shard routing** (§Perf cell D): an earlier revision
+  sorted the GLOBAL flattened token set, which forced GSPMD to all-gather
+  every token across the data axis before routing (~36 s/step collective
+  for deepseek train_4k).  Routing is independent per token, so we sort
+  *within each batch row*: batch stays sharded on data, experts stay
+  sharded on model (EP), and the only cross-device traffic left is the
+  expert-combine partial-sum over the model axis.
+
+Over-capacity tokens are dropped (capacity-factor semantics) per (row,
+expert); the drop fraction is a reported metric.  Aux losses: switch-style
+load-balance + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import TensorSpec, constrain
+from repro.models import layers
+
+
+def moe_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    e, fe = cfg.moe.n_experts, cfg.moe.d_ff_expert
+    out = {
+        "router": TensorSpec((d, e), ("embed", None)),
+        "w_gate": TensorSpec((e, d, fe), ("experts", "embed", "expert_ff")),
+        "w_up": TensorSpec((e, d, fe), ("experts", "embed", "expert_ff")),
+        "w_down": TensorSpec((e, fe, d), ("experts", "expert_ff", "embed")),
+    }
+    if cfg.moe.n_shared_experts:
+        out["shared"] = layers.mlp_specs(
+            d, cfg.moe.n_shared_experts * fe)
+    return out
+
+
+def moe_apply(p: dict, x: jax.Array, cfg: ArchConfig,
+              capacity_factor: float = 1.25) -> Tuple[jax.Array, dict]:
+    """x: (B, T, D) -> (y, metrics).  Differentiable through gates."""
+    b, t, d = x.shape
+    e, k = cfg.moe.n_experts, cfg.moe.top_k
+    n_items = t * k                                    # per-row (token,slot)s
+
+    logits = (x.astype(jnp.float32)
+              @ p["router"].astype(jnp.float32))                  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)               # (B,T,k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)                   # renormalize
+
+    # ---- aux losses (global means; cheap scalars) ----
+    me = probs.mean((0, 1))                                       # (E,)
+    ce = jnp.zeros((b, e), jnp.float32).at[
+        jnp.arange(b)[:, None], expert_ids.reshape(b, -1)].add(
+        1.0 / (b * n_items)).sum(0) * 1.0
+    aux = e * jnp.sum(me * ce)
+    zloss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    # ---- grouped (per batch row) sort-based dispatch ----
+    flat_expert = expert_ids.reshape(b, n_items)                  # (B,I)
+    flat_gate = gate_vals.reshape(b, n_items)
+    flat_token = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], (t, k)).reshape(1, n_items)
+    flat_token = jnp.broadcast_to(flat_token, (b, n_items))
+    order = jnp.argsort(flat_expert, axis=-1)                     # stable
+    take = lambda a: jnp.take_along_axis(a, order, axis=-1)       # noqa: E731
+    sorted_expert = take(flat_expert)
+    sorted_token = take(flat_token)
+    sorted_gate = take(flat_gate)
+
+    cap = max(int(capacity_factor * n_items / e), 1)
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    counts = jnp.zeros((b, e), jnp.int32).at[
+        jnp.broadcast_to(rows, (b, n_items)), sorted_expert].add(1)
+    offsets = jnp.concatenate(
+        [jnp.zeros((b, 1), counts.dtype), jnp.cumsum(counts, -1)[:, :-1]],
+        axis=-1)                                                  # (B,E)
+    rank = jnp.arange(n_items) - jnp.take_along_axis(
+        offsets, sorted_expert, axis=-1)                          # (B,I)
+    keep = rank < cap                                             # capacity
+
+    # gather tokens into the (B, E, C, D) expert buffer (local per shard)
+    slot_pos = offsets[:, :, None] + jnp.arange(cap)[None, None]  # (B,E,C)
+    slot_valid = jnp.arange(cap)[None, None] < \
+        jnp.minimum(counts, cap)[:, :, None]
+    slot_pos = jnp.clip(slot_pos, 0, n_items - 1)
+    tok_for_slot = jnp.take_along_axis(
+        sorted_token.reshape(b, 1, n_items),
+        slot_pos.reshape(b, 1, e * cap), axis=-1).reshape(b, e, cap)
+    xin = jnp.take_along_axis(
+        x[:, None], tok_for_slot[..., None].astype(jnp.int32), axis=2) \
+        * slot_valid[..., None].astype(x.dtype)                   # (B,E,C,D)
+    xin = constrain(xin, ("act_batch", "experts", None, None))
+
+    # expert MLPs — the only matmul FLOPs in this block (E sharded: EP)
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", xin,
+                               p["w_gate"].astype(dt))) \
+        * jnp.einsum("becd,edf->becf", xin, p["w_up"].astype(dt))
+    yexp = jnp.einsum("becf,efd->becd", h, p["w_down"].astype(dt))
+
+    # combine: scatter-add back per row; partial sums over expert shards
+    # become ONE model-axis all-reduce of (B_local, T, D)
+    out_idx = jnp.where(keep, sorted_token, t)                    # drop -> bin T
+    gate_w = jnp.where(keep, sorted_gate, 0.0)
+    item_slot = sorted_expert * cap + jnp.clip(rank, 0, cap - 1)  # (B,I)
+    item_y = jnp.take_along_axis(
+        yexp.reshape(b, e * cap, d), item_slot[..., None], axis=1)  # (B,I,D)
+    y = jnp.zeros((b, t + 1, d), item_y.dtype).at[
+        jnp.broadcast_to(rows, (b, n_items)), out_idx].add(
+        item_y * gate_w[..., None].astype(item_y.dtype))[:, :t]
+    y = constrain(y, ("act_batch", "act_seq", "act_embed"))
+
+    if "shared" in p:
+        sh = p["shared"]
+        y = y + layers.swiglu(x, sh["w_gate"], sh["w_up"], sh["w_down"])
+
+    metrics = {
+        "moe_aux": aux,
+        "moe_zloss": zloss,
+        "moe_drop_frac": 1.0 - keep.mean(),
+    }
+    return y, metrics

@@ -1,0 +1,95 @@
+"""AdamW + cosine schedule + global-norm clipping (self-contained; no optax).
+
+Optimizer state mirrors the param TensorSpec tree, so m/v inherit the exact
+param shardings (FSDP over the data axis, TP over model) — ZeRO-style state
+partitioning falls out of the resolver for free.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import TensorSpec
+
+
+class AdamWState(NamedTuple):
+    step: Any           # () int32
+    m: Any              # param-tree
+    v: Any              # param-tree
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def state_specs(param_specs) -> AdamWState:
+    def zeros_like_spec(s: TensorSpec) -> TensorSpec:
+        return TensorSpec(s.shape, s.axes, jnp.float32, init="zeros")
+    is_spec = lambda x: isinstance(x, TensorSpec)  # noqa: E731
+    return AdamWState(
+        step=TensorSpec((), (), jnp.int32, init="zeros"),
+        m=jax.tree.map(zeros_like_spec, param_specs, is_leaf=is_spec),
+        v=jax.tree.map(zeros_like_spec, param_specs, is_leaf=is_spec),
+    )
+
+
+def schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(math.pi * frac))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = schedule(cfg, step)
+    b1c = 1 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.beta1 * m + (1 - cfg.beta1) * g
+        v = cfg.beta2 * v + (1 - cfg.beta2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        step_vec = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step_vec = step_vec + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_vec).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    new = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [n[0] for n in new])
+    new_m = jax.tree.unflatten(treedef, [n[1] for n in new])
+    new_v = jax.tree.unflatten(treedef, [n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), metrics

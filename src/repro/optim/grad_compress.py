@@ -1,0 +1,92 @@
+"""Int8 gradient compression with error feedback (cross-pod reduces).
+
+At 512+ chips the pod-level all-reduce rides the slow inter-pod links; the
+standard trick is to quantize the gradient to int8 with a per-block scale
+before the cross-pod reduce and carry the quantization error forward into
+the next step (error feedback keeps SGD/Adam convergence unbiased in
+practice).  4x fewer wire bytes on the `pod` axis at the cost of one extra
+elementwise pass.
+
+Pure-jax, shard-transparent: operates leaf-wise on the gradient pytree, so
+GSPMD keeps every tensor's sharding; use inside the train step as
+
+    cg, state = compress(grads, state)
+    cg = jax.lax.pmean(cg, 'pod')        # or implicit GSPMD reduce
+    grads = decompress(cg)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 quantized values (original shape)
+    scale: jax.Array      # per-block scales
+
+
+def _pad_len(n: int) -> int:
+    return (-n) % BLOCK
+
+
+def compress_leaf(g: jax.Array, err: jax.Array):
+    """-> (Compressed, new_err).  err is the carried quantization residual."""
+    g = g.astype(jnp.float32) + err
+    flat = g.reshape(-1)
+    pad = _pad_len(flat.shape[0])
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    deq = (q.astype(jnp.float32) * scale).reshape(-1)[:flat.shape[0]] \
+        .reshape(g.shape)
+    new_err = g - deq
+    return Compressed(q, scale[:, 0]), new_err
+
+
+def decompress_leaf(c: Compressed, shape, dtype=jnp.float32) -> jax.Array:
+    deq = c.q.astype(jnp.float32) * c.scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return deq.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def init_error(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads, err_state):
+    leaves, treedef = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_state)
+    out, new_errs = [], []
+    for g, e in zip(leaves, errs):
+        c, ne = compress_leaf(g, e)
+        out.append(c)
+        new_errs.append(ne)
+    return (jax.tree.unflatten(treedef, out),
+            jax.tree.unflatten(treedef, new_errs))
+
+
+def decompress(compressed, like):
+    cl = jax.tree.leaves(compressed,
+                         is_leaf=lambda x: isinstance(x, Compressed))
+    gl, treedef = jax.tree.flatten(like)
+    return jax.tree.unflatten(
+        treedef, [decompress_leaf(c, g.shape, g.dtype)
+                  for c, g in zip(cl, gl)])
+
+
+def wire_bytes(grads) -> tuple[int, int]:
+    """(uncompressed f32 bytes, compressed int8+scale bytes)."""
+    raw = comp = 0
+    for g in jax.tree.leaves(grads):
+        n = g.size
+        raw += n * 4
+        blocks = (n + BLOCK - 1) // BLOCK
+        comp += n + blocks * 4
+    return raw, comp

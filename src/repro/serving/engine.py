@@ -1,0 +1,123 @@
+"""Continuous-batching serving engine.
+
+Decode runs over a fixed pool of batch *slots*; requests are admitted into
+free slots as others finish, each slot tracking its own sequence position
+(the vectorized ``index`` path through ``attn_decode``).  Prefill is
+compiled per prompt-length bucket (serving systems bucket prompts; the
+compile cache is keyed by length), and the per-request cache strip is
+inserted into the pool cache at the slot's batch row.
+
+The engine runs inside a CapsuleRuntime, so the capsule's control verbs
+(pause/snapshot) apply to serving exactly as to training — the paper's
+"run typical BOINC projects" with the inference workload.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.models.lm import RunConfig
+
+
+@dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    submitted: float = field(default_factory=time.perf_counter)
+    # filled by the engine
+    output: List[int] = field(default_factory=list)
+    first_token_s: Optional[float] = None
+    done_s: Optional[float] = None
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, *, slots: int = 4,
+                 max_len: int = 256, run: RunConfig = RunConfig()):
+        if cfg.enc_dec:
+            raise NotImplementedError("engine serves decoder-only archs")
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.run = run
+        self._decode = jax.jit(api.make_decode_step(cfg, run))
+        self._prefill_cache: Dict[int, callable] = {}
+        # pool caches: batch dim = slots
+        self.caches = jax.tree.map(
+            lambda s: jnp.zeros(s.shape, s.dtype),
+            api.cache_specs(cfg, slots, max_len),
+            is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
+        self.lengths = np.zeros(slots, np.int32)      # per-slot position
+        self.active: List[Optional[Request]] = [None] * slots
+        self.stats = {"served": 0, "decode_steps": 0, "prefills": 0}
+
+    # ------------------------------------------------------------------
+    def _prefill_fn(self, length: int):
+        if length not in self._prefill_cache:
+            self._prefill_cache[length] = jax.jit(
+                api.make_prefill_step(self.cfg, self.max_len, self.run))
+        return self._prefill_cache[length]
+
+    def _admit(self, slot: int, req: Request) -> None:
+        t = len(req.prompt)
+        logits, cache = self._prefill_fn(t)(
+            self.params, {"tokens": req.prompt[None, :]})
+        self.stats["prefills"] += 1
+        # insert the request's cache strip at the slot's batch row
+        def insert(pool, strip):
+            return pool.at[:, slot].set(strip[:, 0].astype(pool.dtype))
+        self.caches = jax.tree.map(insert, self.caches, cache)
+        tok = int(jnp.argmax(logits[0, :self.cfg.vocab_size]))
+        req.output.append(tok)
+        req.first_token_s = time.perf_counter() - req.submitted
+        self.lengths[slot] = t
+        self.active[slot] = req
+
+    def _retire(self, slot: int) -> Request:
+        req = self.active[slot]
+        req.done_s = time.perf_counter() - req.submitted
+        self.active[slot] = None
+        self.lengths[slot] = 0
+        self.stats["served"] += 1
+        return req
+
+    # ------------------------------------------------------------------
+    def run_queue(self, requests: List[Request]) -> List[Request]:
+        """Serve a queue to completion; returns finished requests."""
+        pending = list(requests)
+        finished: List[Request] = []
+        while pending or any(r is not None for r in self.active):
+            # admit into free slots
+            for slot in range(self.slots):
+                if self.active[slot] is None and pending:
+                    self._admit(slot, pending.pop(0))
+            # batched decode over every active slot (inactive rows compute
+            # too — slot masking, the standard continuous-batching cost)
+            tokens = np.zeros((self.slots, 1), np.int32)
+            for slot, req in enumerate(self.active):
+                if req is not None:
+                    tokens[slot, 0] = req.output[-1]
+            logits, self.caches = self._decode(
+                self.params, self.caches,
+                {"tokens": jnp.asarray(tokens),
+                 "index": jnp.asarray(self.lengths)})
+            self.stats["decode_steps"] += 1
+            nxt = np.asarray(
+                jnp.argmax(logits[:, 0, :self.cfg.vocab_size], axis=-1))
+            for slot, req in enumerate(self.active):
+                if req is None:
+                    continue
+                self.lengths[slot] += 1
+                req.output.append(int(nxt[slot]))
+                if (len(req.output) >= req.max_new_tokens
+                        or self.lengths[slot] + 1 >= self.max_len):
+                    finished.append(self._retire(slot))
+        return finished

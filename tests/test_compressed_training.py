@@ -1,0 +1,57 @@
+"""Volunteer training with int8+EF gradient compression still learns, and
+its wire savings are what grad_compress promises."""
+import jax
+import numpy as np
+
+from repro.configs.base import get_arch, reduced
+from repro.core.elastic import SimWorker, VolunteerTrainer
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.distributed.sharding import init_tree
+from repro.models import api
+from repro.models.lm import RunConfig
+from repro.optim import adamw, grad_compress
+
+RUN = RunConfig(remat="none", block_kv=8, ssm_chunk=8)
+OC = adamw.AdamWConfig(lr=5e-3, warmup_steps=5, total_steps=500)
+
+
+def _build(compress: bool):
+    cfg = reduced(get_arch("granite-3-2b"))
+    specs = api.state_specs(cfg)
+    loss_fn = api.make_eval_loss(cfg, RUN)
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    def apply_fn(state, grads):
+        p, o, _ = adamw.update(OC, grads, state.opt, state.params)
+        return api.TrainState(p, o)
+
+    state = api.TrainState(init_tree(specs.params, jax.random.key(0)),
+                           init_tree(specs.opt, jax.random.key(0)))
+    tr = VolunteerTrainer(
+        grad_fn=grad_fn, apply_fn=apply_fn, state=state,
+        stream=TokenStream(DataConfig(cfg.vocab_size, 32, 4, seed=0)),
+        micro_batches=2, compress_grads=compress)
+    tr.add_worker(SimWorker("w0"))
+    tr.add_worker(SimWorker("w1"))
+    return tr
+
+
+def test_compressed_training_learns():
+    ref = _build(False).run(10)
+    comp_tr = _build(True)
+    comp = comp_tr.run(10)
+    # compression still converges, tracking the exact run closely
+    assert comp[-1].loss < comp[0].loss - 0.1
+    assert abs(comp[-1].loss - ref[-1].loss) < 0.15
+    # error-feedback state is alive and bounded
+    err = comp_tr._compress_err
+    enorm = max(float(np.abs(np.asarray(e)).max())
+                for e in jax.tree.leaves(err))
+    assert np.isfinite(enorm)
+
+
+def test_wire_savings_on_real_grads():
+    tr = _build(False)
+    _, grads = tr.grad_fn(tr.state.params, tr.stream.batch(0))
+    raw, comp = grad_compress.wire_bytes(grads)
+    assert raw / comp > 3.5

@@ -1,0 +1,283 @@
+"""V-BOINC core unit tests: chunk store, snapshots, DepDisks, control plane,
+scheduler, server."""
+import numpy as np
+import pytest
+
+from repro.core.capsule import CapsuleSpec, boot
+from repro.core.chunkstore import ChunkStore
+from repro.core.control import (CapsuleRuntime, Coordinator, HostSupervisor,
+                                JobState, RuntimeState)
+from repro.core.depdisk import DiskSet
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.server import Project, VBoincServer
+from repro.core.snapshots import SnapshotManager
+from repro.models.lm import RunConfig
+
+
+# ---------------------------------------------------------------------------
+# chunk store
+# ---------------------------------------------------------------------------
+def test_chunkstore_dedup_and_integrity(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=1 << 12)
+    data = np.arange(10_000, dtype=np.float32).tobytes()
+    h1 = store.put_buffer(memoryview(bytearray(data)))
+    before = store.stats["put_bytes"]
+    h2 = store.put_buffer(memoryview(bytearray(data)))
+    assert h1 == h2
+    assert store.stats["put_bytes"] == before        # full dedup
+    assert store.get_buffer(h1) == data
+    # tamper detection
+    victim = h1[0]
+    p = store._path(victim)
+    p.write_bytes(b"tampered")
+    with pytest.raises(IOError):
+        store.get(victim)
+
+
+def test_chunkstore_gc(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=64)
+    keep = store.put(b"a" * 64)
+    drop = store.put(b"b" * 64)
+    removed = store.gc({keep})
+    assert removed == 1
+    assert store.has(keep) and not store.has(drop)
+
+
+# ---------------------------------------------------------------------------
+# snapshots
+# ---------------------------------------------------------------------------
+def _state(x=0.0):
+    return {"w": np.full((1000,), 1.0 + x, np.float32),
+            "frozen": np.arange(4096, dtype=np.float32),
+            "step": np.int32(x)}
+
+
+def test_snapshot_restore_roundtrip():
+    mgr = SnapshotManager(ChunkStore(chunk_bytes=1 << 12))
+    info = mgr.snapshot(_state(1), step=1, aux={"cursor": {"next_index": 7}})
+    assert info.kind == "base"
+    got, aux = mgr.restore(target_tree=_state(0))
+    assert aux["cursor"]["next_index"] == 7
+    np.testing.assert_array_equal(got["w"], _state(1)["w"])
+    assert got["step"] == 1
+
+
+def test_differencing_snapshots_store_only_changes():
+    store = ChunkStore(chunk_bytes=1 << 12)
+    mgr = SnapshotManager(store, keep_last=10)
+    mgr.snapshot(_state(1), step=1)
+    info2 = mgr.snapshot(_state(1), step=2)      # identical state
+    assert info2.kind == "diff"
+    assert info2.new_bytes == 0                  # pure dedup
+    info3 = mgr.snapshot(_state(2), step=3)      # w+step changed, frozen not
+    assert 0 < info3.new_bytes < info3.total_bytes
+    assert info3.dedup_bytes > 0                 # frozen tensor reused
+
+
+def test_snapshot_gc_respects_keep_last():
+    store = ChunkStore(chunk_bytes=1 << 12)
+    mgr = SnapshotManager(store, keep_last=2)
+    for i in range(5):
+        mgr.snapshot(_state(i), step=i)
+    assert len(mgr.order) == 2
+    # all remaining manifests restorable after the sweep
+    for sid in mgr.order:
+        got, _ = mgr.restore(sid, target_tree=_state(0))
+        assert got["w"].shape == (1000,)
+
+
+def test_async_snapshot_overlaps():
+    mgr = SnapshotManager(ChunkStore(chunk_bytes=1 << 12), async_mode=True)
+    fut = mgr.snapshot(_state(1), step=1, block=False)
+    info = mgr.wait()
+    assert info.total_bytes > 0
+    got, _ = mgr.restore(target_tree=_state(0))
+    np.testing.assert_array_equal(got["w"], _state(1)["w"])
+
+
+# ---------------------------------------------------------------------------
+# DepDisks
+# ---------------------------------------------------------------------------
+def test_depdisk_partitioning_and_swap():
+    store = ChunkStore(chunk_bytes=1 << 12)
+    disks = DiskSet(store, keep_last=2)
+    base = {"params": np.ones(5000, np.float32)}
+    disks.create_base(base)
+    disks.attach_dep("taskA", {"opt": np.zeros(2000, np.float32)})
+    infoA = disks.snapshot_disk("taskA", {"opt": np.ones(2000, np.float32)},
+                                step=1)
+    assert infoA.new_bytes > 0
+    # base untouched by task writes
+    infoB = disks.snapshot_disk("base", base, step=1)
+    assert infoB.new_bytes == 0
+    # swap project: detach A, attach B; base stays
+    disks.swap_task("taskA", "taskB", {"opt": np.full(2000, 2.0, np.float32)})
+    names = {d.name: d for d in disks.disks()}
+    assert not names["taskA"].attached and names["taskB"].attached
+    assert names["base"].attached
+    # re-attach A later and restore its state
+    disks._attached["taskA"] = True
+    got, _ = disks.restore_disk("taskA",
+                                target_tree={"opt": np.zeros(2000,
+                                                             np.float32)})
+    np.testing.assert_array_equal(got["opt"], np.ones(2000, np.float32))
+
+
+def test_depdisk_detached_rejects_snapshot():
+    disks = DiskSet(ChunkStore())
+    disks.attach_dep("t")
+    disks.detach("t")
+    with pytest.raises(KeyError):
+        disks.snapshot_disk("t", {"x": np.zeros(4)}, step=0)
+
+
+# ---------------------------------------------------------------------------
+# control plane
+# ---------------------------------------------------------------------------
+def test_two_level_command_wrapping():
+    rt = CapsuleRuntime("r0")
+    sup = HostSupervisor("h0", rt)
+    # guestcontrol requires a running VM (paper Fig. 2 semantics)
+    assert not sup.boinccmd("suspend")["ok"]
+    sup.control_vm("startvm")
+    assert rt.state is RuntimeState.RUNNING
+    assert sup.boinccmd("suspend")["ok"]
+    assert rt.job_state is JobState.SUSPENDED
+    assert not rt.accepting_work
+    sup.boinccmd("resume")
+    assert rt.accepting_work
+    # vm-level pause != job-level suspend (controlvm vs boinccmd)
+    sup.control_vm("pause")
+    assert rt.state is RuntimeState.SUSPENDED
+    assert rt.job_state is JobState.RUNNING
+    assert not rt.accepting_work
+    sup.control_vm("unpause")
+    assert rt.accepting_work
+    # verb namespaces are enforced
+    assert not sup.boinccmd("poweroff")["ok"]
+    assert not sup.control_vm("suspend")["ok"]
+
+
+def test_coordinator_failure_detection():
+    coord = Coordinator()
+    rts = []
+    for i in range(3):
+        rt = CapsuleRuntime(f"r{i}")
+        sup = HostSupervisor(f"h{i}", rt, heartbeat_timeout=10.0)
+        sup.control_vm("startvm")
+        coord.register(sup)
+        rts.append(rt)
+    assert coord.failed_hosts() == []
+    rts[1].last_heartbeat -= 100.0          # silent host
+    assert coord.failed_hosts() == ["h1"]
+    out = coord.broadcast("guest", "nomorework")
+    assert all(v["ok"] for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# scheduler
+# ---------------------------------------------------------------------------
+def test_quorum_rejects_minority_corruption():
+    clock = SimClock()
+    s = VolunteerScheduler(replication=3, quorum=2, clock=clock)
+    s.submit(0, {})
+    for w in ("a", "b", "c"):
+        s.join(w)
+        assert s.request_work(w) is not None
+    s.report("a", 0, "GOOD")
+    s.report("b", 0, "BAD")
+    assert not s.units[0].completed
+    s.report("c", 0, "GOOD")
+    assert s.units[0].completed and s.units[0].canonical == "GOOD"
+    assert s.workers["b"].invalid == 1
+    assert s.workers["a"].credit > 0 and s.workers["b"].credit == 0
+
+
+def test_lease_expiry_reissues():
+    clock = SimClock()
+    s = VolunteerScheduler(deadline_s=10.0, clock=clock)
+    s.submit(0, {})
+    s.join("w1")
+    s.join("w2")
+    assert s.request_work("w1").unit_id == 0
+    assert s.request_work("w2") is None          # already leased
+    clock.advance(11.0)
+    assert s.request_work("w2").unit_id == 0     # re-issued after deadline
+    assert s.stats["reissued"] == 1
+
+
+def test_exponential_backoff():
+    clock = SimClock()
+    s = VolunteerScheduler(backoff_base_s=1.0, backoff_max_s=64.0,
+                           clock=clock)
+    s.join("w")
+    assert s.request_work("w") is None           # no work at all
+    t1 = s.workers["w"].backoff_until
+    assert s.request_work("w") is None           # still backing off
+    clock.advance(t1 + 1)
+    s.request_work("w")
+    t2 = s.workers["w"].backoff_until - clock()
+    assert t2 > 1.0                               # grew exponentially
+
+
+def test_straggler_duplicate_dispatch():
+    clock = SimClock()
+    s = VolunteerScheduler(deadline_s=10.0, straggler_factor=0.5,
+                           clock=clock)
+    s.submit(0, {})
+    s.join("slow")
+    s.join("fast")
+    assert s.request_work("slow") is not None
+    clock.advance(6.0)                            # > 0.5 * deadline
+    dup = s.request_work("fast")
+    assert dup is not None and dup.unit_id == 0
+    assert s.stats["duplicates"] == 1
+    s.report("fast", 0, "H")                      # first valid result wins
+    assert s.units[0].completed
+
+
+def test_worker_leave_drops_leases():
+    clock = SimClock()
+    s = VolunteerScheduler(clock=clock)
+    s.submit(0, {})
+    s.join("w")
+    s.request_work("w")
+    s.leave("w")
+    s.join("w2")
+    assert s.request_work("w2").unit_id == 0      # immediately available
+
+
+# ---------------------------------------------------------------------------
+# server + capsule
+# ---------------------------------------------------------------------------
+def test_capsule_manifest_integrity():
+    spec = CapsuleSpec("granite-3-2b", "train_4k", RunConfig())
+    same = CapsuleSpec("granite-3-2b", "train_4k", RunConfig())
+    other = CapsuleSpec("granite-3-2b", "train_4k", RunConfig(remat="none"))
+    assert spec.manifest_hash == same.manifest_hash
+    assert spec.manifest_hash != other.manifest_hash
+    with pytest.raises(PermissionError):
+        boot(spec, mesh=None, verify_hash=other.manifest_hash)
+
+
+def test_server_flow_probe_fetch_work():
+    store = ChunkStore()
+    server = VBoincServer(store)
+    spec = CapsuleSpec("qwen2-1.5b", "train_4k", RunConfig())
+    proj = Project("lm", spec, dep_manifest={"disk": "adamw-state"})
+    proj.scheduler = VolunteerScheduler(clock=SimClock())
+    server.publish(proj)
+    key = server.register_user("vol")
+    assert server.probe_dependencies("lm") == {"disk": "adamw-state"}
+    got, missing, moved = server.fetch_capsule("lm", set(), key)
+    assert got.manifest_hash == spec.manifest_hash and moved > 0
+    # second fetch: chunks cached client-side -> nothing moves
+    _, missing2, moved2 = server.fetch_capsule(
+        "lm", {spec.manifest_hash}, key)
+    assert moved2 == 0 and not missing2
+    with pytest.raises(PermissionError):
+        server.fetch_capsule("lm", set(), "bad-key")
+    proj.scheduler.submit(0, {"batch_index": 0})
+    unit = server.request_work("lm", "vol")
+    assert unit is not None
+    assert server.report_result("lm", "vol", unit.unit_id, "H")

@@ -1,0 +1,140 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunkstore import ChunkStore
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.snapshots import SnapshotManager
+from repro.data.pipeline import DataConfig, TokenStream
+from repro.kernels.delta_encode.ops import diff_blocks, patch_blocks
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Invariant: delta-encode roundtrip is bit-exact for arbitrary mutations
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(size=st.integers(1, 40_000), nmut=st.integers(0, 64),
+       seed=st.integers(0, 2 ** 31))
+def test_delta_roundtrip_property(size, nmut, seed):
+    rng = np.random.default_rng(seed)
+    old = rng.standard_normal(size).astype(np.float32)
+    new = old.copy()
+    if nmut and size:
+        idx = rng.integers(0, size, min(nmut, size))
+        new[idx] = rng.standard_normal(idx.size).astype(np.float32)
+    tiles, bitmap, _ = diff_blocks(old, new, mode="ref")
+    rec = patch_blocks(old, tiles, bitmap, mode="ref")
+    assert np.array_equal(rec.view(np.uint8), new.view(np.uint8))
+    # changed-block count is minimal: identical arrays -> no blocks
+    if np.array_equal(old.view(np.uint8), new.view(np.uint8)):
+        assert bitmap.sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# Invariant: snapshot chain restores every retained snapshot exactly,
+# regardless of mutation pattern, chunk size and keep_last
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(chunk_log2=st.integers(8, 14), keep=st.integers(1, 4),
+       steps=st.integers(1, 6), seed=st.integers(0, 2 ** 31))
+def test_snapshot_chain_property(chunk_log2, keep, steps, seed):
+    rng = np.random.default_rng(seed)
+    mgr = SnapshotManager(ChunkStore(chunk_bytes=2 ** chunk_log2),
+                          keep_last=keep)
+    states, sids = [], []
+    w = rng.standard_normal(3000).astype(np.float32)
+    for i in range(steps):
+        mut = rng.integers(0, w.size, 50)
+        w = w.copy()
+        w[mut] += 1.0
+        state = {"w": w, "step": np.int32(i)}
+        info = mgr.snapshot(state, step=i)
+        states.append(state)
+        sids.append(info.snapshot_id)
+    # every retained snapshot restores exactly
+    for sid, state in list(zip(sids, states))[-keep:]:
+        got, _ = mgr.restore(sid, target_tree=state)
+        np.testing.assert_array_equal(got["w"], state["w"])
+        assert got["step"] == state["step"]
+
+
+# ---------------------------------------------------------------------------
+# Invariant: the scheduler completes ALL units under arbitrary failure
+# interleavings (workers dying, leases expiring, corrupt minorities)
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(n_units=st.integers(1, 8), n_workers=st.integers(2, 6),
+       seed=st.integers(0, 2 ** 31))
+def test_scheduler_always_completes(n_units, n_workers, seed):
+    rng = np.random.default_rng(seed)
+    clock = SimClock()
+    s = VolunteerScheduler(replication=2, quorum=2, deadline_s=10.0,
+                           max_extra_results=32, clock=clock)
+    for u in range(n_units):
+        s.submit(u, {})
+    workers = [f"w{i}" for i in range(n_workers)]
+    for w in workers:
+        s.join(w)
+    alive = set(workers)
+    for _ in range(10_000):
+        if s.done():
+            break
+        progressed = False
+        for w in list(alive):
+            unit = s.request_work(w)
+            if unit is None:
+                continue
+            progressed = True
+            r = rng.random()
+            if r < 0.10 and len(alive) > 2:     # dies holding the lease
+                s.leave(w)
+                alive.discard(w)
+            elif r < 0.25:                       # corrupt result
+                s.report(w, unit.unit_id, f"bad-{rng.integers(1e9)}")
+            else:                                # honest deterministic result
+                s.report(w, unit.unit_id, f"good-{unit.unit_id}")
+        if not progressed:
+            clock.advance(100.0)
+            # volunteers keep arriving — a stuck quorum (every current
+            # worker already reported) needs fresh hosts
+            nw = f"spawn{rng.integers(1e9)}"
+            s.join(nw)
+            alive.add(nw)
+    assert s.done()
+    # canonical results are always the honest ones
+    for uid, h in s.canonical_results().items():
+        assert h == f"good-{uid}"
+
+
+# ---------------------------------------------------------------------------
+# Invariant: data pipeline is deterministic random-access (work-unit replay)
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2 ** 31), index=st.integers(0, 10_000))
+def test_pipeline_random_access_determinism(seed, index):
+    cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=2, seed=seed)
+    a = TokenStream(cfg).batch(index)
+    b = TokenStream(cfg).batch(index)           # fresh instance, same result
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    assert a["tokens"].min() >= 0 and a["tokens"].max() < 128
+    # labels are inputs shifted by one
+    np.testing.assert_array_equal(a["tokens"][:, 1:], a["labels"][:, :-1])
+
+
+# ---------------------------------------------------------------------------
+# Invariant: chunk store never loses a live chunk across arbitrary gc calls
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(n=st.integers(1, 30), seed=st.integers(0, 2 ** 31))
+def test_chunkstore_gc_property(n, seed):
+    rng = np.random.default_rng(seed)
+    store = ChunkStore(chunk_bytes=256)
+    hashes = [store.put(rng.bytes(rng.integers(1, 512))) for _ in range(n)]
+    live = set(rng.choice(hashes, size=rng.integers(0, n + 1),
+                          replace=False).tolist())
+    store.gc(live)
+    for h in hashes:
+        assert store.has(h) == (h in live) or h in live
