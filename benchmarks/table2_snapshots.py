@@ -88,12 +88,19 @@ def _tree_bytes(tree) -> int:
 
 
 def run(rounds: int = 4) -> list[str]:
+    """Per workload: base-image cost (first snapshot) vs differencing cost
+    (later snapshots) in bytes and wall time — Table II's shape: CPU-bound
+    workloads diff to ~nothing, memory/disk-heavy ones pay for what they
+    wrote."""
     lines = []
     for name, (mutate, state0) in _mutators().items():
         store = ChunkStore(chunk_bytes=1 << 14)     # 16 KiB blocks
         disks = DiskSet(store, keep_last=2)
-        disks.create_base(state0["base"])
-        disks.attach_dep("task", state0["dep"])
+        t0 = time.perf_counter()
+        info_base = disks.create_base(state0["base"])
+        info_dep0 = disks.attach_dep("task", state0["dep"])
+        base_wall = time.perf_counter() - t0
+        base_total = info_base.new_bytes + info_dep0.new_bytes
         state = state0
         snap_times, dep_bytes, base_bytes = [], [], []
         for i in range(rounds):
@@ -105,10 +112,16 @@ def run(rounds: int = 4) -> list[str]:
             dep_bytes.append(dep_info.new_bytes)
             base_bytes.append(base_info.new_bytes)
         mem = _tree_bytes(state)
+        diff_total = int(np.mean(dep_bytes)) + int(np.mean(base_bytes))
         lines.append(csv_line(
             f"table2.{name}", float(np.mean(snap_times)) * 1e6,
             f"mem_bytes={mem};depdisk_delta={int(np.mean(dep_bytes))};"
-            f"vm_delta={int(np.mean(base_bytes))}"))
+            f"vm_delta={int(np.mean(base_bytes))};"
+            f"base_bytes={base_total};base_wall_us={base_wall * 1e6:.0f};"
+            f"diff_bytes={diff_total};"
+            f"diff_ratio={diff_total / max(1, base_total):.4f};"
+            f"delta_objects={store.stats['delta_chunks']};"
+            f"rebased={store.stats['rebased']}"))
     return lines
 
 

@@ -1,55 +1,184 @@
-"""Content-addressed chunk store — the substrate for differencing snapshots.
+"""Content-addressed chunk store with raw and *delta* objects.
 
-VirtualBox differencing images store "all write operations after a snapshot";
-our analogue chunks every tensor into fixed-size blocks, keyed by SHA-256.
-A snapshot manifest is a list of chunk hashes per tensor; a *differencing*
-snapshot re-uses every unchanged chunk of its parent for free (same hash →
-same object), so its incremental cost is exactly the written-to blocks —
-the paper's Table II behaviour (CPU-bound workloads → ~zero snapshot size,
-memory/disk-heavy → large) falls out by construction.
+The substrate for differencing snapshots (paper §III-E).  Two object
+kinds live side by side:
 
-The store backend is a directory of hash-named objects (or in-memory for
-tests).  Integrity = re-hash on read (the paper's "trusted application"
-concern: a volunteer can verify every byte it receives).
+* **raw**   — chunk bytes, addressed by ``sha256(bytes)`` (refs are bare
+  hex, as in v1 manifests);
+* **delta** — ``parent_ref + zero-run-RLE-compressed XOR payload``,
+  addressed as ``"d:" + sha256(record)``.  The analogue of a VirtualBox
+  differencing image: a block written after a snapshot stores only its
+  XOR against the parent block, so incremental cost is exactly the
+  changed bytes (the paper's Table II behaviour by construction).
+
+Delta records carry their chain depth; ``put_delta`` transparently
+*rebases* — materializes a fresh raw object — when the chain would exceed
+``max_chain`` (bounding restore cost) or when the encoded delta would be
+no smaller than the chunk itself.  ``resolve`` reconstructs any ref: XOR
+is associative, so a chain folds into the root base in one pass.  GC
+marks the *closure* of live refs (a delta keeps its parents alive even
+when the parent's manifest has been trimmed).
+
+Integrity = re-hash on read for both kinds (the paper's "trusted
+application" concern: a volunteer can verify every byte it receives).
+``transfer_plan`` is the shared block-level dedup accounting used by both
+the server's capsule distribution and a re-attaching volunteer's restore.
 """
 from __future__ import annotations
 
 import hashlib
 import os
+import struct
 import threading
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterable, Optional
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
 
 DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB
+DELTA_PREFIX = "d:"
+_DELTA_MAGIC = b"VBD1"
 
 
 def sha256(data: bytes) -> str:
     return hashlib.sha256(data).hexdigest()
 
 
+def is_delta_ref(ref: str) -> bool:
+    return ref.startswith(DELTA_PREFIX)
+
+
+# -- zero-run RLE ----------------------------------------------------------
+# XOR payloads of a partly-changed chunk are mostly zero; encode as a token
+# stream of [tag u8][len u32] where tag 0 = zero run, tag 1 = literal run
+# (+ bytes).  Runs shorter than 8 bytes are folded into literals so worst
+# case stays near 1x; callers fall back to the uncompressed payload when
+# RLE does not win.
+
+_MIN_ZERO_RUN = 8
+
+
+def rle_zero_encode(data: bytes) -> bytes:
+    a = np.frombuffer(data, np.uint8)
+    if a.size == 0:
+        return b""
+    nz = a != 0
+    # bail before the per-run loop when RLE cannot win: mostly-nonzero
+    # payloads, or so many short runs (dense interleaving, e.g. fp32
+    # tensors where every low byte changed) that token overhead dominates.
+    # The single-literal fallback is 5 bytes longer than the input, so
+    # put_delta's "payload >= xor" check discards it in O(1).
+    def _literal():
+        return b"\x01" + struct.pack("<I", a.size) + data
+
+    if int(np.count_nonzero(nz)) * 2 > a.size:
+        return _literal()
+    change = np.flatnonzero(np.diff(nz.view(np.int8))) + 1
+    if change.size > a.size // 64:        # avg run < 64 B: not worth it
+        return _literal()
+    starts = np.concatenate(([0], change))
+    ends = np.concatenate((change, [a.size]))
+    out = bytearray()
+    lit_start = None
+    for s, e in zip(starts, ends):
+        if not nz[s] and e - s >= _MIN_ZERO_RUN:
+            if lit_start is not None:
+                out += b"\x01" + struct.pack("<I", s - lit_start)
+                out += data[lit_start:s]
+                lit_start = None
+            out += b"\x00" + struct.pack("<I", e - s)
+        elif lit_start is None:
+            lit_start = s
+    if lit_start is not None:
+        out += b"\x01" + struct.pack("<I", a.size - lit_start)
+        out += data[lit_start:]
+    return bytes(out)
+
+
+def rle_zero_decode(payload: bytes, out_len: int) -> bytes:
+    out = bytearray(out_len)
+    pos = i = 0
+    while i < len(payload):
+        tag = payload[i]
+        n = struct.unpack_from("<I", payload, i + 1)[0]
+        i += 5
+        if tag == 1:
+            out[pos:pos + n] = payload[i:i + n]
+            i += n
+        pos += n
+    return bytes(out)
+
+
+def _xor_bytes(a: bytes, b: bytes) -> bytes:
+    return (np.frombuffer(a, np.uint8) ^ np.frombuffer(b, np.uint8)).tobytes()
+
+
+@dataclass
+class DeltaRecord:
+    parent: str
+    depth: int
+    raw_len: int
+    payload: bytes            # XOR vs parent, possibly RLE-compressed
+    compressed: bool
+
+    def pack(self) -> bytes:
+        p = self.parent.encode()
+        return (_DELTA_MAGIC
+                + struct.pack("<HIBH", self.depth, self.raw_len,
+                              int(self.compressed), len(p))
+                + p + self.payload)
+
+    @classmethod
+    def unpack(cls, rec: bytes) -> "DeltaRecord":
+        if rec[:4] != _DELTA_MAGIC:
+            raise IOError("not a delta record")
+        depth, raw_len, comp, plen = struct.unpack_from("<HIBH", rec, 4)
+        off = 4 + struct.calcsize("<HIBH")
+        parent = rec[off:off + plen].decode()
+        return cls(parent, depth, raw_len, rec[off + plen:], bool(comp))
+
+    def xor(self) -> bytes:
+        return (rle_zero_decode(self.payload, self.raw_len)
+                if self.compressed else self.payload)
+
+
 class ChunkStore:
-    """Deduplicating object store with refcount GC."""
+    """Deduplicating raw+delta object store with closure-marking GC."""
 
     def __init__(self, root: Optional[os.PathLike] = None,
-                 chunk_bytes: int = DEFAULT_CHUNK_BYTES):
+                 chunk_bytes: int = DEFAULT_CHUNK_BYTES,
+                 max_chain: int = 8):
         self.chunk_bytes = int(chunk_bytes)
+        self.max_chain = int(max_chain)
         self.root = Path(root) if root is not None else None
         if self.root is not None:
             (self.root / "objects").mkdir(parents=True, exist_ok=True)
+            (self.root / "deltas").mkdir(parents=True, exist_ok=True)
         self._mem: Dict[str, bytes] = {}
+        self._mem_delta: Dict[str, bytes] = {}
+        self._depths: Dict[str, int] = {}        # delta ref -> chain depth
         self._lock = threading.Lock()
         self.stats = {"put_bytes": 0, "dedup_bytes": 0, "get_bytes": 0,
-                      "put_chunks": 0, "dedup_chunks": 0}
+                      "put_chunks": 0, "dedup_chunks": 0,
+                      "delta_chunks": 0, "rebased": 0}
 
-    # -- object layer ------------------------------------------------------
+    # -- raw object layer --------------------------------------------------
     def _path(self, h: str) -> Path:
         return self.root / "objects" / h[:2] / h[2:]
 
-    def has(self, h: str) -> bool:
+    def _dpath(self, h: str) -> Path:
+        return self.root / "deltas" / h[:2] / h[2:]
+
+    def has(self, ref: str) -> bool:
+        if is_delta_ref(ref):
+            h = ref[len(DELTA_PREFIX):]
+            if self.root is None:
+                return h in self._mem_delta
+            return h in self._mem_delta or self._dpath(h).exists()
         if self.root is None:
-            return h in self._mem
-        return h in self._mem or self._path(h).exists()
+            return ref in self._mem
+        return ref in self._mem or self._path(ref).exists()
 
     def put(self, data: bytes) -> str:
         h = sha256(data)
@@ -80,36 +209,172 @@ class ChunkStore:
         self.stats["get_bytes"] += len(data)
         return data
 
-    def delete(self, h: str) -> None:
+    def delete(self, ref: str) -> None:
         with self._lock:
-            self._mem.pop(h, None)
+            if is_delta_ref(ref):
+                h = ref[len(DELTA_PREFIX):]
+                self._mem_delta.pop(h, None)
+                self._depths.pop(ref, None)
+                if self.root is not None and self._dpath(h).exists():
+                    self._dpath(h).unlink()
+                return
+            self._mem.pop(ref, None)
             if self.root is not None:
-                p = self._path(h)
+                p = self._path(ref)
                 if p.exists():
                     p.unlink()
 
-    def all_hashes(self) -> Iterable[str]:
+    def all_refs(self) -> Iterable[str]:
         out = set(self._mem)
+        out.update(DELTA_PREFIX + h for h in self._mem_delta)
         if self.root is not None:
             for sub in (self.root / "objects").glob("*/*"):
                 out.add(sub.parent.name + sub.name)
+            for sub in (self.root / "deltas").glob("*/*"):
+                out.add(DELTA_PREFIX + sub.parent.name + sub.name)
         return out
+
+    # kept for callers of the v1 API
+    all_hashes = all_refs
+
+    # -- delta object layer ------------------------------------------------
+    def put_delta(self, parent_ref: str, xor_bytes: bytes, *,
+                  full_bytes: Optional[bytes] = None) -> str:
+        """Store one changed block as a delta against ``parent_ref``.
+
+        Returns the new ref.  Transparently rebases to a raw object when
+        the chain would exceed ``max_chain`` or the delta record would be
+        no smaller than the chunk itself (``full_bytes``, when given,
+        avoids a resolve to materialize the rebase)."""
+        depth = self.ref_depth(parent_ref) + 1
+        if depth > self.max_chain:
+            full = full_bytes if full_bytes is not None else _xor_bytes(
+                self.resolve(parent_ref), xor_bytes)
+            self.stats["rebased"] += 1
+            return self.put(full)
+        payload = rle_zero_encode(xor_bytes)
+        compressed = True
+        if len(payload) >= len(xor_bytes):
+            payload, compressed = xor_bytes, False
+        rec = DeltaRecord(parent_ref, depth, len(xor_bytes), payload,
+                          compressed).pack()
+        if full_bytes is not None and len(rec) >= len(full_bytes):
+            return self.put(full_bytes)   # delta no cheaper than a base
+        h = sha256(rec)
+        ref = DELTA_PREFIX + h
+        with self._lock:
+            if self.has(ref):
+                self.stats["dedup_bytes"] += len(rec)
+                self.stats["dedup_chunks"] += 1
+            else:
+                self.stats["put_bytes"] += len(rec)
+                self.stats["put_chunks"] += 1
+                self.stats["delta_chunks"] += 1
+                if self.root is None:
+                    self._mem_delta[h] = rec
+                else:
+                    p = self._dpath(h)
+                    p.parent.mkdir(parents=True, exist_ok=True)
+                    tmp = p.with_suffix(".tmp")
+                    tmp.write_bytes(rec)
+                    os.replace(tmp, p)
+        self._depths[ref] = depth
+        return ref
+
+    def _get_delta(self, ref: str) -> DeltaRecord:
+        h = ref[len(DELTA_PREFIX):]
+        if self.root is None or h in self._mem_delta:
+            rec = self._mem_delta[h]
+        else:
+            rec = self._dpath(h).read_bytes()
+        if sha256(rec) != h:
+            raise IOError(f"delta {h[:12]} failed integrity check")
+        self.stats["get_bytes"] += len(rec)
+        return DeltaRecord.unpack(rec)
+
+    def ref_depth(self, ref: str) -> int:
+        """Chain depth of a ref (0 for raw objects)."""
+        if not is_delta_ref(ref):
+            return 0
+        d = self._depths.get(ref)
+        if d is None:
+            d = self._get_delta(ref).depth
+            self._depths[ref] = d
+        return d
+
+    def resolve(self, ref: str) -> bytes:
+        """Reconstruct a block from its base chain (raw refs pass through)."""
+        if not is_delta_ref(ref):
+            return self.get(ref)
+        acc: Optional[bytes] = None
+        while is_delta_ref(ref):
+            rec = self._get_delta(ref)
+            xor = rec.xor()
+            acc = xor if acc is None else _xor_bytes(acc, xor)
+            ref = rec.parent
+        return _xor_bytes(self.get(ref), acc)
+
+    def object_size(self, ref: str) -> int:
+        """Stored (on-wire) byte size of one object."""
+        if not self.has(ref):
+            raise KeyError(f"object {ref[:14]} not in store")
+        if is_delta_ref(ref):
+            h = ref[len(DELTA_PREFIX):]
+            if h in self._mem_delta:
+                return len(self._mem_delta[h])
+            return self._dpath(h).stat().st_size
+        if ref in self._mem:
+            return len(self._mem[ref])
+        return self._path(ref).stat().st_size
 
     # -- tensor layer ------------------------------------------------------
     def put_buffer(self, buf: memoryview) -> list[str]:
-        """Chunk + store one tensor's bytes; returns the hash list."""
+        """Chunk + store one tensor's bytes; returns the ref list."""
         buf = memoryview(buf).cast("B")
         return [self.put(bytes(buf[o:o + self.chunk_bytes]))
                 for o in range(0, max(len(buf), 1), self.chunk_bytes)]
 
-    def get_buffer(self, hashes: list[str]) -> bytes:
-        return b"".join(self.get(h) for h in hashes)
+    def get_buffer(self, refs: list[str]) -> bytes:
+        return b"".join(self.get(h) for h in refs)
+
+    def resolve_buffer(self, refs: list[str]) -> bytes:
+        """Like ``get_buffer`` but follows delta chains."""
+        return b"".join(self.resolve(r) for r in refs)
+
+    # -- dedup accounting / GC ---------------------------------------------
+    def live_closure(self, refs: Iterable[str]) -> set[str]:
+        """Expand refs over delta parents — everything needed to resolve."""
+        seen: set[str] = set()
+        stack = list(refs)
+        while stack:
+            r = stack.pop()
+            if r in seen:
+                continue
+            seen.add(r)
+            if is_delta_ref(r):
+                stack.append(self._get_delta(r).parent)
+        return seen
+
+    def transfer_plan(self, refs: Iterable[str],
+                      client_has: set[str]) -> tuple[List[str], int, int]:
+        """Block-level dedup accounting shared by server + volunteer.
+
+        -> (missing refs, bytes to move, bytes saved by dedup).  A client
+        that already holds a delta's parents downloads only the delta
+        record."""
+        needed = self.live_closure(refs)
+        missing = sorted(r for r in needed if r not in client_has)
+        moved = sum(self.object_size(r) for r in missing)
+        dedup = sum(self.object_size(r) for r in needed if r in client_has)
+        return missing, moved, dedup
 
     def gc(self, live: set[str]) -> int:
-        """Delete all objects not in ``live``; returns count removed."""
-        dead = [h for h in self.all_hashes() if h not in live]
-        for h in dead:
-            self.delete(h)
+        """Delete all objects not in the closure of ``live``; returns count
+        removed.  (The closure keeps delta parents alive.)"""
+        keep = self.live_closure(live)
+        dead = [r for r in self.all_refs() if r not in keep]
+        for r in dead:
+            self.delete(r)
         return len(dead)
 
 

@@ -118,10 +118,10 @@ class DiskSet:
         return out
 
     def gc_all(self) -> int:
-        """Mark live chunks across ALL disks, sweep the shared store."""
+        """Mark live refs across ALL disks (the store expands the closure
+        over delta parents), sweep the shared store."""
         live: set[str] = set()
         for mgr in self._managers.values():
             for man in mgr.manifests.values():
-                for ent in man.tensors.values():
-                    live.update(ent.hashes)
+                live.update(man.all_refs())
         return self.store.gc(live)

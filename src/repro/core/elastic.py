@@ -87,6 +87,7 @@ class VolunteerTrainer:
         self.workers: Dict[str, SimWorker] = {}
         self._rng = np.random.default_rng(seed)
         self._grad_cache: Dict[str, tuple] = {}   # result_hash -> (loss, grads)
+        self.last_restore_plan: Optional[dict] = None
         self.history: List[RoundStats] = []
         # elastic membership: called when the fleet empties — a real
         # volunteer project keeps receiving new volunteers
@@ -202,8 +203,21 @@ class VolunteerTrainer:
         return [self.round(s) for s in range(start_step, start_step + steps)]
 
     # ---------------- crash recovery ----------------
-    def restore_latest(self, abstract_state) -> int:
-        """Restore state+cursor from the latest snapshot; returns next step."""
+    def restore_latest(self, abstract_state, *,
+                       client_hashes: Optional[set] = None) -> int:
+        """Restore state+cursor from the latest snapshot; returns next step.
+
+        ``client_hashes``: refs this volunteer already holds (e.g. from a
+        previous attach).  When given, ``last_restore_plan`` records the
+        block-level download accounting — the same ``transfer_plan`` the
+        server's ``fetch_capsule`` uses, so a re-attaching volunteer
+        downloads only the delta objects written since it detached."""
+        if client_hashes is not None:
+            missing, moved, dedup = self.snapshots.download_plan(
+                client_hashes)
+            self.last_restore_plan = {"missing": len(missing),
+                                      "bytes_moved": moved,
+                                      "bytes_dedup": dedup}
         state, aux = self.snapshots.restore(target_tree=abstract_state)
         self.state = state
         self.cursor = Cursor.from_state(aux["cursor"])

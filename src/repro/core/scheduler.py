@@ -17,12 +17,16 @@ Production mechanics implemented here:
   exact result.
 
 The scheduler is pure bookkeeping (no jax): the elastic trainer drives it
-with real train-step executions.  ``tasks_per_day_capacity`` feeds the
-paper's 8.8 M-tasks/day server-throughput comparison.
+with real train-step executions.  Dispatch and lease expiry walk a pending
+index (completed units leave it lazily), so ``request_work`` is O(1)
+amortized regardless of how many units have ever been submitted —
+``tasks_per_day_capacity`` feeds the paper's 8.8 M-tasks/day
+server-throughput comparison.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -95,6 +99,11 @@ class VolunteerScheduler:
         self.straggler_factor = straggler_factor
         self.clock = clock
         self.units: Dict[int, WorkUnit] = {}
+        # assignable/pending index: completed units leave this deque lazily
+        # (pruned when a unit completes), so dispatch/expiry scan only open
+        # units — O(1) amortized per request instead of O(all units ever)
+        self._open: deque[int] = deque()
+        self._open_dirty = False
         self.workers: Dict[str, WorkerInfo] = {}
         self.stats = {"dispatched": 0, "completed": 0, "reissued": 0,
                       "duplicates": 0, "rejected_requests": 0,
@@ -112,9 +121,11 @@ class VolunteerScheduler:
         info = self.workers.get(worker_id)
         if info is not None:
             info.alive = False
-        # drop leases so units re-issue immediately
-        for unit in self.units.values():
-            if worker_id in unit.leases and not unit.completed:
+        # drop leases so units re-issue immediately (open units only)
+        self._prune_open()
+        for uid in self._open:
+            unit = self.units[uid]
+            if worker_id in unit.leases:
                 del unit.leases[worker_id]
                 self.stats["dropped_leases"] += 1
 
@@ -127,8 +138,19 @@ class VolunteerScheduler:
                       quorum=quorum or self.quorum,
                       deadline_s=self.deadline_s,
                       max_extra_results=self.max_extra_results)
+        prev = self.units.get(unit_id)
+        if prev is not None and prev.completed:
+            self._prune_open()    # drop the stale entry before re-adding
         self.units[unit_id] = wu
+        if prev is None or prev.completed:
+            self._open.append(unit_id)
         return wu
+
+    def _prune_open(self) -> None:
+        if self._open_dirty:
+            self._open = deque(uid for uid in self._open
+                               if not self.units[uid].completed)
+            self._open_dirty = False
 
     def _assignable(self, wu: WorkUnit, worker_id: str, now: float) -> bool:
         if wu.completed or worker_id in wu.results or worker_id in wu.leases:
@@ -156,7 +178,8 @@ class VolunteerScheduler:
             self.stats["rejected_requests"] += 1
             return None
         self._expire_leases(now)
-        for wu in self.units.values():
+        for uid in self._open:                 # submit order, open units only
+            wu = self.units[uid]
             if self._assignable(wu, worker_id, now):
                 dup = bool(wu.leases) or bool(wu.results)
                 wu.leases[worker_id] = now
@@ -183,6 +206,7 @@ class VolunteerScheduler:
         wu.results[worker_id] = result_hash
         if wu.quorum_met():
             wu.completed = True
+            self._open_dirty = True
             self.stats["completed"] += 1
             for wid, h in wu.results.items():
                 info = self.workers.get(wid)
@@ -200,9 +224,9 @@ class VolunteerScheduler:
         return False
 
     def _expire_leases(self, now: float) -> None:
-        for wu in self.units.values():
-            if wu.completed:
-                continue
+        self._prune_open()
+        for uid in self._open:
+            wu = self.units[uid]
             expired = [w for w, t0 in wu.leases.items()
                        if now - t0 > wu.deadline_s]
             for w in expired:
@@ -212,10 +236,12 @@ class VolunteerScheduler:
 
     # ---------------- progress ----------------
     def pending(self) -> List[WorkUnit]:
-        return [u for u in self.units.values() if not u.completed]
+        self._prune_open()
+        return [self.units[uid] for uid in self._open]
 
     def done(self) -> bool:
-        return all(u.completed for u in self.units.values())
+        self._prune_open()
+        return not self._open
 
     def canonical_results(self) -> Dict[int, str]:
         return {uid: u.canonical for uid, u in self.units.items()

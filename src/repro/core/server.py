@@ -4,18 +4,22 @@ Distributes *capsules* ("VM images") instead of scientific applications, and
 answers DepDisk probes: the V-BOINC client asks whether a project has
 dependencies (1.1), downloads the DepDisk if so, otherwise creates a fresh
 one locally (3).  Transfer accounting reproduces the paper's bandwidth story
-(207 MB compressed image / ~3 min at 9 Mbps → bytes-moved metrics here, with
-chunk dedup meaning a re-attach moves only missing chunks).
+(207 MB compressed image / ~3 min at 9 Mbps → bytes-moved metrics here):
+``fetch_capsule`` runs the same block-level ``transfer_plan`` dedup as a
+volunteer's restore, so a re-attaching client moves only the missing blocks
+— typically just the delta objects written since it detached.
 """
 from __future__ import annotations
 
-import time
+import hashlib
+import json
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 from repro.core.capsule import CapsuleSpec
 from repro.core.chunkstore import ChunkStore
 from repro.core.scheduler import VolunteerScheduler
+from repro.core.snapshots import SnapshotManager
 
 
 @dataclass
@@ -25,6 +29,9 @@ class Project:
     dep_manifest: Optional[dict] = None      # None = no dependencies
     scheduler: VolunteerScheduler = field(
         default_factory=VolunteerScheduler)
+    # attached snapshot chain: a re-attaching volunteer syncs its state
+    # blocks through the same fetch path as the capsule itself
+    snapshots: Optional[SnapshotManager] = None
 
 
 @dataclass
@@ -44,10 +51,22 @@ class VBoincServer:
         self.account_keys: Dict[str, str] = {}    # weak account keys
 
     def publish(self, project: Project) -> None:
+        # fetch_capsule resolves snapshot refs against the SERVER's store
+        if (project.snapshots is not None
+                and project.snapshots.store is not self.store):
+            raise ValueError("project snapshot manager must share the "
+                             "server's chunk store")
+        # store the capsule manifest as a chunk: its content hash IS the
+        # spec's manifest_hash, so capsule distribution rides the same
+        # block-level dedup accounting as snapshot state
+        self.store.put(json.dumps(project.capsule.manifest(), sort_keys=True,
+                                  default=str).encode())
         self.projects[project.name] = project
 
     def register_user(self, user: str) -> str:
-        key = f"weak-{hash(user) & 0xffffffff:08x}"
+        # derive from sha256, NOT Python's salted hash(): account keys must
+        # be stable across server restarts (PYTHONHASHSEED)
+        key = f"weak-{hashlib.sha256(user.encode()).hexdigest()[:8]}"
         self.account_keys[user] = key
         return key
 
@@ -58,21 +77,27 @@ class VBoincServer:
 
     def fetch_capsule(self, project: str, client_hashes: set[str],
                       account_key: str) -> tuple[CapsuleSpec, list[str], int]:
-        """(2) download the capsule; only chunks the client lacks move.
+        """(2) download the capsule; only blocks the client lacks move.
 
-        Returns (spec, missing chunk hashes, bytes transferred)."""
+        Returns (spec, missing refs, bytes transferred).  The needed set is
+        the capsule manifest plus the project's latest snapshot blocks (when
+        a snapshot chain is attached), expanded over delta parents — the
+        same ``ChunkStore.transfer_plan`` accounting a volunteer's
+        ``restore_latest`` uses, so a re-attaching client downloads only the
+        delta objects written since it detached."""
         if account_key not in self.account_keys.values():
             raise PermissionError("unknown account key")
         proj = self.projects[project]
         log = self.transfers.setdefault(project, TransferLog())
         log.requests += 1
-        # capsule payload chunks = manifest hash (specs are tiny; any model
-        # weights ride the chunk store like DepDisks)
         needed = [proj.capsule.manifest_hash]
-        missing = [h for h in needed if h not in client_hashes]
-        moved = sum(len(h) for h in missing)   # manifest bytes (demo scale)
+        if proj.snapshots is not None and proj.snapshots.latest():
+            man = proj.snapshots.get_manifest(proj.snapshots.latest())
+            needed += man.all_refs()
+        missing, moved, dedup = self.store.transfer_plan(needed,
+                                                         client_hashes)
         log.bytes_out += moved
-        log.bytes_dedup += sum(len(h) for h in needed) - moved
+        log.bytes_dedup += dedup
         return proj.capsule, missing, moved
 
     def request_work(self, project: str, worker_id: str):

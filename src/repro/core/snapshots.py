@@ -1,29 +1,39 @@
-"""System-level checkpointing with differencing snapshots (paper §III-E).
+"""System-level checkpointing with device-resident differencing snapshots.
 
 The SnapshotManager checkpoints the ENTIRE program state transparently —
 params, optimizer moments, data cursor, RNG, step — so "project developers
-omit application-level checkpointing from their code".  Mechanics mirror
-VirtualBox snapshots:
+omit application-level checkpointing from their code" (paper §III-E).
+Mechanics mirror VirtualBox snapshots, but the diff is computed *before*
+anything crosses the device→host boundary:
 
-* ``snapshot()``       -> manifest of per-tensor chunk hashes.  The first is a
-  full base image; each later one is a *differencing image*: unchanged chunks
-  dedup to the parent's objects, so stored bytes == changed blocks only.
-* ``restore(sid)``     -> resolve the manifest chain and rebuild the pytree.
-* ``delete/gc``        -> "previous stale snapshot files … are deleted by
-  V-BOINC": mark live chunks from retained snapshots, sweep the rest.
-* async mode           -> device→host transfer happens synchronously (cheap),
-  hashing + store writes run on a background thread so checkpointing overlaps
-  training compute (the distributed-optimization trick at scale).
+* ``snapshot()`` — the first snapshot is a full base image.  Every later
+  one is a *differencing image*: the Pallas ``changed_bitmap`` kernel
+  (kernels/delta_encode) XORs the new state against the previous
+  snapshot's host mirror per-tensor and emits one flag per 32 KiB tile;
+  only the changed tiles are gathered and transferred.  Unchanged store
+  chunks re-use the parent manifest's refs with **no hashing at all**, and
+  changed chunks are written as delta objects (``parent_ref + RLE XOR``)
+  — snapshot cost is O(changed blocks), not O(state bytes).
+* **Manifest v2** — each ``TensorEntry`` records per-block refs that are
+  either raw hashes or ``"d:"`` delta refs.  v1 manifests (``hashes``)
+  remain readable, so old snapshot directories restore unchanged.
+* ``restore(sid)`` — resolve each ref through its base chain
+  (``ChunkStore.resolve``) and rebuild the pytree; chains are bounded by
+  the store's ``max_chain`` (deep chains rebase automatically).
+* ``delete/gc`` — mark the *closure* of live refs from retained
+  snapshots (a delta keeps its parents alive), sweep the rest.
+* async mode — delta planning (device diff + changed-tile transfer)
+  happens synchronously (cheap); store writes run on a background thread
+  so checkpointing overlaps training compute.
 
-Restore across meshes: manifests record logical tensors (path, shape, dtype);
-``restore`` re-shards onto whatever mesh the caller's shardings dictate —
-this is what lets a capsule resume on a *different* volunteer pod (elastic
-rescale).
+Restore across meshes: manifests record logical tensors (path, shape,
+dtype); ``restore`` re-shards onto whatever mesh the caller's shardings
+dictate — this is what lets a capsule resume on a *different* volunteer
+pod (elastic rescale).
 """
 from __future__ import annotations
 
 import json
-import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -34,6 +44,10 @@ import jax
 import numpy as np
 
 from repro.core.chunkstore import ChunkStore, sha256
+from repro.kernels.delta_encode.ops import (TILE_BYTES, apply_tiles,
+                                            changed_blocks)
+
+MANIFEST_VERSION = 2
 
 
 def _flatten(tree) -> list[tuple[str, Any]]:
@@ -45,15 +59,21 @@ def _flatten(tree) -> list[tuple[str, Any]]:
 class TensorEntry:
     shape: tuple
     dtype: str
-    hashes: List[str]
+    refs: List[str]           # per-block: raw sha256 hex | "d:" delta ref
+
+    # v1 manifests named this field "hashes"; keep the alias for callers
+    @property
+    def hashes(self) -> List[str]:
+        return self.refs
 
     def to_json(self):
         return {"shape": list(self.shape), "dtype": self.dtype,
-                "hashes": self.hashes}
+                "refs": self.refs}
 
     @classmethod
     def from_json(cls, d):
-        return cls(tuple(d["shape"]), d["dtype"], list(d["hashes"]))
+        return cls(tuple(d["shape"]), d["dtype"],
+                   list(d.get("refs", d.get("hashes", []))))
 
 
 @dataclass
@@ -65,9 +85,14 @@ class Manifest:
     tensors: Dict[str, TensorEntry]
     aux: dict = field(default_factory=dict)      # cursor, rng seed, metrics
     kind: str = "diff"                            # base | diff
+    version: int = MANIFEST_VERSION
+
+    def all_refs(self) -> List[str]:
+        return [r for ent in self.tensors.values() for r in ent.refs]
 
     def to_json(self) -> str:
         return json.dumps({
+            "version": self.version,
             "snapshot_id": self.snapshot_id, "parent": self.parent,
             "step": self.step, "created": self.created, "kind": self.kind,
             "aux": self.aux,
@@ -80,7 +105,8 @@ class Manifest:
         return cls(d["snapshot_id"], d["parent"], d["step"], d["created"],
                    {k: TensorEntry.from_json(t)
                     for k, t in d["tensors"].items()},
-                   d.get("aux", {}), d.get("kind", "diff"))
+                   d.get("aux", {}), d.get("kind", "diff"),
+                   d.get("version", 1))
 
 
 @dataclass
@@ -92,6 +118,21 @@ class SnapshotInfo:
     new_bytes: int        # differencing-image cost (changed blocks)
     dedup_bytes: int      # blocks reused from the chain
     total_bytes: int      # logical state size
+    changed_chunks: int = 0
+    reused_chunks: int = 0
+
+
+@dataclass
+class _TensorPlan:
+    """Per-tensor work computed synchronously at snapshot() time."""
+    key: str
+    shape: tuple
+    dtype: str
+    nbytes: int
+    base: Optional[np.ndarray] = None        # full host image (base path)
+    deltas: Dict[int, bytes] = field(default_factory=dict)
+    # delta path: chunk index -> xor bytes (full bytes come from the
+    # mirror at write time, so the plan holds each changed chunk once)
 
 
 class SnapshotManager:
@@ -99,7 +140,9 @@ class SnapshotManager:
                  root: Optional[Path] = None,
                  keep_last: int = 3,
                  async_mode: bool = False,
-                 auto_gc: bool = True):
+                 auto_gc: bool = True,
+                 delta: bool = True,
+                 delta_mode: str = "auto"):
         self.store = store
         self.root = Path(root) if root is not None else None
         if self.root is not None:
@@ -109,43 +152,141 @@ class SnapshotManager:
         # sweeps would delete sibling disks' chunks — the owner must run a
         # global mark (DiskSet.gc_all) instead.
         self.auto_gc = auto_gc
+        # delta=False falls back to the v1 full-hash path (every snapshot
+        # re-hashes every chunk); delta_mode picks the diff backend:
+        # "auto" (TPU kernel on TPU, numpy oracle elsewhere), "tpu",
+        # "interpret", "ref".
+        self.delta = delta
+        self.delta_mode = delta_mode
         self.manifests: Dict[str, Manifest] = {}
         self.order: List[str] = []                 # snapshot chain
         self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
         self._pending: Optional[Future] = None
         self._counter = 0
+        self._mirror: Dict[str, np.ndarray] = {}   # host copy of last state
+        self._prev_refs: Dict[str, List[str]] = {}
 
     # ------------------------------------------------------------------
     def snapshot(self, state, *, step: int, aux: Optional[dict] = None,
                  block: bool = True) -> SnapshotInfo | Future:
-        """Take a snapshot.  ``state`` is any pytree of arrays."""
+        """Take a snapshot.  ``state`` is any pytree of arrays.
+
+        Planning (device diff + changed-tile transfer + mirror update) is
+        synchronous; store/manifest writes go to the background thread in
+        async mode."""
+        self.wait()              # delta planning needs the previous refs
         t0 = time.time()
-        host = [(k, np.asarray(v)) for k, v in _flatten(state)]
+        try:
+            plan = [self._plan_tensor(k, v) for k, v in _flatten(state)]
+        except BaseException:
+            # a partial plan has already advanced some tensors' mirrors
+            # while _prev_refs still points at the old chunks; drop both so
+            # the next snapshot re-bases instead of recording stale refs
+            self._mirror.clear()
+            self._prev_refs.clear()
+            raise
         if self._pool is not None and not block:
-            if self._pending is not None:      # back-pressure: one in flight
-                self._pending.result()
             self._pending = self._pool.submit(
-                self._write, host, step, aux or {}, t0)
+                self._write, plan, step, aux or {}, t0)
             return self._pending
-        return self._write(host, step, aux or {}, t0)
+        return self._write(plan, step, aux or {}, t0)
 
     def wait(self) -> Optional[SnapshotInfo]:
         if self._pending is not None:
-            info = self._pending.result()
-            self._pending = None
-            return info
+            fut, self._pending = self._pending, None   # raise at most once
+            return fut.result()
         return None
 
-    def _write(self, host, step: int, aux: dict, t0: float) -> SnapshotInfo:
+    # ------------------------------------------------------------------
+    def _plan_tensor(self, key: str, leaf) -> _TensorPlan:
+        if not hasattr(leaf, "dtype"):
+            leaf = np.asarray(leaf)
+        shape = tuple(leaf.shape)
+        dtype = str(leaf.dtype)
+        cb = self.store.chunk_bytes
+        prev = self._mirror.get(key)
+        usable = (self.delta and prev is not None
+                  and prev.shape == shape and str(prev.dtype) == dtype
+                  and key in self._prev_refs)
+        if not usable:
+            host = np.ascontiguousarray(np.asarray(leaf))
+            if host.shape != shape:
+                host = host.reshape(shape)   # ascontiguousarray 0-d -> 1-d
+            if host is leaf or host.base is not None:
+                host = host.copy()       # mirror must not alias caller data
+            self._mirror[key] = host
+            return _TensorPlan(key, shape, dtype, host.nbytes, base=host)
+
+        # delta path: device-side probe, transfer only changed tiles
+        tiles, bitmap, nbytes = changed_blocks(prev, leaf,
+                                               mode=self.delta_mode)
+        plan = _TensorPlan(key, shape, dtype, nbytes)
+        changed_tiles = np.flatnonzero(bitmap)
+        if changed_tiles.size == 0:
+            return plan                  # nothing moved, nothing to store
+        old_flat = prev.reshape(-1).view(np.uint8)
+        new_flat = apply_tiles(old_flat.copy(), tiles, bitmap)
+        chunks: set[int] = set()
+        for ti in changed_tiles:
+            s = int(ti) * TILE_BYTES
+            e = min(s + TILE_BYTES, nbytes)
+            if e > s:
+                chunks.update(range(s // cb, (e - 1) // cb + 1))
+        for ci in sorted(chunks):
+            s, e = ci * cb, min((ci + 1) * cb, nbytes)
+            xor_arr = old_flat[s:e] ^ new_flat[s:e]
+            if not xor_arr.any():
+                continue       # tile changed, but not this chunk's bytes
+            plan.deltas[ci] = xor_arr.tobytes()
+        self._mirror[key] = new_flat.view(prev.dtype).reshape(shape)
+        return plan
+
+    def _write(self, plan: List[_TensorPlan], step: int, aux: dict,
+               t0: float) -> SnapshotInfo:
+        try:
+            return self._write_inner(plan, step, aux, t0)
+        except BaseException:
+            # planning already advanced the mirror; a half-written store
+            # would make the NEXT diff record stale parent refs.  Drop the
+            # mirror so the next snapshot is a full base image.
+            self._mirror.clear()
+            self._prev_refs.clear()
+            raise
+
+    def _write_inner(self, plan: List[_TensorPlan], step: int, aux: dict,
+                     t0: float) -> SnapshotInfo:
         before_put = self.store.stats["put_bytes"]
         before_dedup = self.store.stats["dedup_bytes"]
+        cb = self.store.chunk_bytes
         tensors = {}
-        total = 0
-        for key, arr in host:
-            buf = memoryview(np.ascontiguousarray(arr)).cast("B")
-            total += buf.nbytes
-            tensors[key] = TensorEntry(arr.shape, str(arr.dtype),
-                                       self.store.put_buffer(buf))
+        total = changed = reused = reused_bytes = 0
+        for p in plan:
+            total += p.nbytes
+            if p.base is not None:
+                flat = p.base.reshape(-1).view(np.uint8)
+                refs = self.store.put_buffer(memoryview(flat))
+                changed += len(refs)
+            else:
+                prev_refs = self._prev_refs[p.key]
+                new_flat = self._mirror[p.key].reshape(-1).view(np.uint8)
+                refs = []
+                for ci, pref in enumerate(prev_refs):
+                    xor = p.deltas.get(ci)
+                    if xor is None:
+                        refs.append(pref)
+                        reused += 1
+                        reused_bytes += max(
+                            0, min((ci + 1) * cb, p.nbytes) - ci * cb)
+                    else:
+                        s, e = ci * cb, min((ci + 1) * cb, p.nbytes)
+                        refs.append(self.store.put_delta(
+                            pref, xor, full_bytes=new_flat[s:e].tobytes()))
+                        changed += 1
+            tensors[p.key] = TensorEntry(p.shape, p.dtype, refs)
+            self._prev_refs[p.key] = refs
+        # chain reuse counts as dedup, as the v1 hash-everything path did
+        self.store.stats["dedup_bytes"] += reused_bytes
+        self.store.stats["dedup_chunks"] += reused
         self._counter += 1
         sid = f"snap-{self._counter:06d}-{sha256(str(step).encode())[:8]}"
         parent = self.order[-1] if self.order else None
@@ -161,7 +302,8 @@ class SnapshotManager:
             wall_s=time.time() - t0,
             new_bytes=self.store.stats["put_bytes"] - before_put,
             dedup_bytes=self.store.stats["dedup_bytes"] - before_dedup,
-            total_bytes=total)
+            total_bytes=total,
+            changed_chunks=changed, reused_chunks=reused)
 
     # ------------------------------------------------------------------
     def restore(self, snapshot_id: Optional[str] = None, *,
@@ -170,15 +312,16 @@ class SnapshotManager:
 
         Returns (state, aux).  ``target_tree`` supplies the pytree structure
         (e.g. abstract state); flattened key paths must match the manifest.
+        Handles v2 (delta-ref) and v1 (hash-list) manifests alike.
         """
         self.wait()
         sid = snapshot_id or (self.order[-1] if self.order else None)
         if sid is None:
             raise ValueError("no snapshots available")
-        man = self.manifests.get(sid) or self._load_manifest(sid)
+        man = self.get_manifest(sid)
         arrays = {}
         for key, ent in man.tensors.items():
-            data = self.store.get_buffer(ent.hashes)
+            data = self.store.resolve_buffer(ent.refs)
             arr = np.frombuffer(data, dtype=np.dtype(ent.dtype))
             arrays[key] = arr.reshape(ent.shape)
         if target_tree is None:
@@ -196,6 +339,11 @@ class SnapshotManager:
             out.append(jax.device_put(a, sh) if sh is not None else a)
         return jax.tree_util.tree_unflatten(treedef, out), man.aux
 
+    def get_manifest(self, sid: str) -> Manifest:
+        """In-memory manifest, falling back to the on-disk copy."""
+        man = self.manifests.get(sid)
+        return man if man is not None else self._load_manifest(sid)
+
     def _load_manifest(self, sid: str) -> Manifest:
         if self.root is None:
             raise KeyError(sid)
@@ -203,6 +351,20 @@ class SnapshotManager:
             (self.root / "manifests" / f"{sid}.json").read_text())
         self.manifests[sid] = man
         return man
+
+    # ------------------------------------------------------------------
+    def download_plan(self, client_refs: set[str],
+                      snapshot_id: Optional[str] = None):
+        """Block-level transfer accounting for a re-attaching volunteer.
+
+        -> (missing refs, bytes to move, bytes saved) for the given (or
+        latest) snapshot — the same ``ChunkStore.transfer_plan`` the
+        server's ``fetch_capsule`` uses."""
+        sid = snapshot_id or (self.order[-1] if self.order else None)
+        if sid is None:
+            raise ValueError("no snapshots available")
+        return self.store.transfer_plan(self.get_manifest(sid).all_refs(),
+                                        client_refs)
 
     # ------------------------------------------------------------------
     def _trim_manifests(self) -> None:
@@ -215,12 +377,12 @@ class SnapshotManager:
                     p.unlink()
 
     def gc(self) -> int:
-        """Keep the last ``keep_last`` snapshots; mark-and-sweep the store."""
+        """Keep the last ``keep_last`` snapshots; mark the closure of their
+        refs (delta parents stay live) and sweep the store."""
         self._trim_manifests()
         live: set[str] = set()
         for man in self.manifests.values():
-            for ent in man.tensors.values():
-                live.update(ent.hashes)
+            live.update(man.all_refs())
         return self.store.gc(live)
 
     def latest(self) -> Optional[str]:

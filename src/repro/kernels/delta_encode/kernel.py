@@ -36,6 +36,11 @@ def _apply_kernel(old_ref, delta_ref, new_ref):
     new_ref[...] = jax.lax.bitwise_xor(old_ref[...], delta_ref[...])
 
 
+def _bitmap_kernel(old_ref, new_ref, changed_ref):
+    d = jax.lax.bitwise_xor(old_ref[...], new_ref[...])
+    changed_ref[0] = jnp.any(d != 0).astype(jnp.int32)
+
+
 def _as_tiles(flat_i32: jax.Array):
     n = flat_i32.shape[0]
     pad = (-n) % TILE
@@ -66,6 +71,46 @@ def delta_encode(old: jax.Array, new: jax.Array, *,
         interpret=interpret,
     )(o32, n32)
     return delta, changed, n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def changed_bitmap(old: jax.Array, new: jax.Array, *,
+                   interpret: bool = False):
+    """Probe pass: per-tile changed flags ONLY -> (changed (nblk,) i32, n).
+
+    Unlike ``delta_encode`` the full delta never touches HBM — the kernel
+    streams both tensors and emits one int32 per (8, 1024) tile.  For a
+    mostly-unchanged state this is the whole device-side cost of a
+    differencing snapshot; the host reads the tiny bitmap and gathers just
+    the changed tiles afterwards (``gather_delta``)."""
+    assert old.shape == new.shape and old.dtype == new.dtype
+    o32, _ = _as_tiles(_bitcast_i32(old))
+    n32, n = _as_tiles(_bitcast_i32(new))
+    nblk = o32.shape[0]
+    changed = pl.pallas_call(
+        _bitmap_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, SUB, LANE), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, SUB, LANE), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nblk,), jnp.int32),
+        interpret=interpret,
+    )(o32, n32)
+    return changed, n
+
+
+@jax.jit
+def gather_delta(old: jax.Array, new: jax.Array,
+                 idx: jax.Array) -> jax.Array:
+    """Second pass: XOR only the changed tiles, gathered on device.
+
+    ``idx`` is the changed-tile index vector from ``changed_bitmap``; the
+    result is the compacted (k, 8, 1024) i32 delta — the only payload that
+    crosses the device→host boundary."""
+    o32, _ = _as_tiles(_bitcast_i32(old))
+    n32, _ = _as_tiles(_bitcast_i32(new))
+    return jax.lax.bitwise_xor(jnp.take(o32, idx, axis=0),
+                               jnp.take(n32, idx, axis=0))
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -1,16 +1,39 @@
 """Jit'd wrapper + host-side compaction for differencing snapshots.
 
-``diff_blocks`` returns only the changed tiles (+bitmap) — what the snapshot
-manager would upload; ``patch_blocks`` reverses it.  numpy fallback mirrors
-the kernel exactly (used on hosts without a TPU runtime).
+Two entry points:
+
+* ``diff_blocks``/``patch_blocks`` — the original one-shot API: materialize
+  the full delta, then compact on host (used by tests and small tensors).
+* ``changed_blocks``/``tree_changed_blocks`` — the snapshot hot path: a
+  probe-then-gather pipeline.  Pass 1 (``changed_bitmap`` kernel) writes
+  only one int32 per 32 KiB tile; the host fetches that tiny bitmap, and
+  pass 2 gathers + XORs just the changed tiles on device.  Unchanged
+  blocks never cross the device→host boundary — the paper's §III-E claim
+  that a differencing snapshot costs only the written-to blocks.
+
+The numpy ``ref`` mode mirrors the kernel bit-for-bit (used on hosts
+without a TPU runtime; the default when jax is on CPU).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.kernels.delta_encode.kernel import (TILE, delta_apply,
-                                               delta_encode)
+from repro.kernels.delta_encode.kernel import (LANE, SUB, TILE,
+                                               changed_bitmap, delta_apply,
+                                               delta_encode, gather_delta)
 from repro.kernels.delta_encode.ref import delta_apply_ref, delta_encode_ref
+
+TILE_BYTES = TILE * 4          # one (8, 1024) i32 tile = 32 KiB of state
+
+# dtypes the Pallas kernel can bitcast; everything else falls back to ref
+KERNEL_DTYPES = ("int32", "float32", "bfloat16", "float16", "int16")
+
+
+def _resolve_mode(mode: str) -> str:
+    if mode != "auto":
+        return mode
+    import jax
+    return "tpu" if jax.default_backend() == "tpu" else "ref"
 
 
 def diff_blocks(old, new, *, mode: str = "interpret"):
@@ -34,3 +57,76 @@ def patch_blocks(old, changed_tiles, bitmap, *, mode: str = "interpret"):
         return delta_apply_ref(old, full)
     out = delta_apply(old, full, interpret=(mode == "interpret"))
     return np.asarray(out)
+
+
+def changed_blocks(old, new, *, mode: str = "auto"):
+    """Probe-then-gather diff of one tensor.
+
+    -> (changed_tiles (k, 8, 1024) i32 numpy, bitmap (nblk,) i32 numpy,
+        nbytes).  ``mode``: "auto" (tpu kernel on TPU, numpy ref
+    otherwise), "tpu", "interpret" (Pallas interpreter), or "ref".
+    On the kernel paths only the bitmap and the k changed tiles are
+    transferred to host.
+    """
+    mode = _resolve_mode(mode)
+    nbytes = int(old.nbytes) if hasattr(old, "nbytes") \
+        else int(np.asarray(old).nbytes)
+    if mode != "ref" and str(new.dtype) not in KERNEL_DTYPES:
+        mode = "ref"                      # kernel can't bitcast this dtype
+    if mode == "ref":
+        delta, bitmap = delta_encode_ref(old, new)
+        tiles = delta[bitmap.astype(bool)]
+        return tiles, bitmap, nbytes
+    import jax
+    import jax.numpy as jnp
+    interpret = (mode == "interpret")
+    old = jax.device_put(old)             # upload the mirror ONCE; both
+    bm, _ = changed_bitmap(old, new, interpret=interpret)  # passes reuse it
+    bitmap = np.asarray(bm)               # tiny: one i32 per 32 KiB
+    idx = np.flatnonzero(bitmap)
+    k = idx.size
+    if k == 0:
+        return np.zeros((0, SUB, LANE), np.int32), bitmap, nbytes
+    # pad the gather index to the next power of two so gather_delta sees
+    # O(log n) distinct shapes instead of recompiling per changed-tile count
+    padded = 1 << (k - 1).bit_length()
+    idx = np.concatenate([idx, np.full(padded - k, idx[-1], idx.dtype)])
+    tiles = np.asarray(gather_delta(old, new,
+                                    jnp.asarray(idx, jnp.int32)))[:k]
+    return tiles, bitmap, nbytes
+
+
+def tree_changed_blocks(old_tree, new_tree, *, mode: str = "auto"):
+    """Batched per-tensor diff over two pytrees.
+
+    -> {keypath: (changed_tiles, bitmap, nbytes)} — one probe + gather per
+    leaf, keyed by ``jax.tree_util.keystr`` paths (the same keys snapshot
+    manifests use).
+    """
+    import jax
+    olds = {jax.tree_util.keystr(p): l for p, l in
+            jax.tree_util.tree_flatten_with_path(old_tree)[0]}
+    news = {jax.tree_util.keystr(p): l for p, l in
+            jax.tree_util.tree_flatten_with_path(new_tree)[0]}
+    if olds.keys() != news.keys():
+        raise ValueError("old/new trees have different structures")
+    return {k: changed_blocks(olds[k], news[k], mode=mode) for k in olds}
+
+
+def apply_tiles(flat_u8: np.ndarray, tiles: np.ndarray,
+                bitmap: np.ndarray) -> np.ndarray:
+    """XOR compacted changed tiles into a flat uint8 buffer, in place.
+
+    ``flat_u8`` is the previous state's byte image; tile ``i`` covers bytes
+    ``[i*TILE_BYTES, (i+1)*TILE_BYTES)`` of the (padded) stream — the tail
+    tile is clipped to the buffer length.  Returns ``flat_u8``.
+    """
+    nbytes = flat_u8.size
+    for j, ti in enumerate(np.flatnonzero(bitmap)):
+        s = int(ti) * TILE_BYTES
+        e = min(s + TILE_BYTES, nbytes)
+        if e <= s:
+            continue
+        tb = np.frombuffer(np.ascontiguousarray(tiles[j]), np.uint8)[:e - s]
+        flat_u8[s:e] ^= tb
+    return flat_u8

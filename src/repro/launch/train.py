@@ -112,10 +112,13 @@ def main(argv=None) -> dict:
     start_step = 0
     if args.resume:
         if root is not None:
-            # pick up on-disk manifests from the previous process
-            for p in sorted((root / "snaps" / "manifests").glob("*.json")):
-                from repro.core.snapshots import Manifest
-                man = Manifest.from_json(p.read_text())
+            # pick up on-disk manifests from the previous process; order by
+            # (step, created), NOT filename — snapshot ids restart per
+            # process, so a resumed run's newest snapshot can sort first
+            from repro.core.snapshots import Manifest
+            mans = [Manifest.from_json(p.read_text())
+                    for p in (root / "snaps" / "manifests").glob("*.json")]
+            for man in sorted(mans, key=lambda m: (m.step, m.created)):
                 snaps.manifests[man.snapshot_id] = man
                 snaps.order.append(man.snapshot_id)
         abstract = jax.eval_shape(

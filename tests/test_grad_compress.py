@@ -1,5 +1,9 @@
 """Gradient-compression invariants: bounded error, error-feedback recovery,
 4x wire savings."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np

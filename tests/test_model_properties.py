@@ -1,9 +1,12 @@
 """Model-level properties: causality, batch-permutation equivariance, and
 padding invariance — hypothesis-driven on reduced configs."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.configs.base import get_arch, reduced

@@ -1,4 +1,8 @@
 """Property-based tests (hypothesis) on the system's invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import numpy as np
 from hypothesis import given, settings, strategies as st
 

@@ -1,9 +1,12 @@
 """Sharding resolver unit + property tests (single-device mesh semantics and
 pure PartitionSpec logic — the 512-device meshes are covered by the dry-run).
 """
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import jax
 import numpy as np
-import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import Mesh, PartitionSpec as P
 
