@@ -12,10 +12,16 @@ state subsets, with periodic differencing snapshots:
 
 Columns map 1:1 to the paper: Snapshot Time (s) | Memory Size (state bytes)
 | DepDisk Snapshot Size (changed bytes in the mutable DepDisk) | VM Snapshot
-Size (changed bytes in the base disk).
+Size (changed bytes in the base disk).  The uplink columns close the loop
+in the other direction: each round's "dep" update is quantized to int8
+(optim/grad_compress) and streamed to a server store as chunk deltas
+(core/uplink), so ``uplink_bytes`` is the deduped bytes a volunteer
+actually moves up versus ``uplink_dense`` (the whole int8 payload).
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -25,16 +31,18 @@ from benchmarks.common import csv_line
 from repro.configs.base import get_arch, reduced
 from repro.core.chunkstore import ChunkStore
 from repro.core.depdisk import DiskSet
+from repro.core.uplink import UplinkEncoder, push_update
 from repro.data.pipeline import DataConfig, TokenStream
 from repro.distributed.sharding import init_tree
 from repro.models import api
 from repro.models.lm import RunConfig
-from repro.optim import adamw
+from repro.optim import adamw, grad_compress
 
 
-def _mutators():
-    cfg = reduced(get_arch("granite-3-2b"), n_layers=2, d_model=128,
-                  d_ff=256, vocab_size=512)
+def _mutators(tiny: bool = False):
+    cfg = reduced(get_arch("granite-3-2b"),
+                  n_layers=1 if tiny else 2, d_model=64 if tiny else 128,
+                  d_ff=128 if tiny else 256, vocab_size=256 if tiny else 512)
     run = RunConfig(remat="none", block_kv=8, ssm_chunk=8)
     specs = api.state_specs(cfg)
     params = init_tree(specs.params, jax.random.key(0))
@@ -87,13 +95,19 @@ def _tree_bytes(tree) -> int:
     return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree))
 
 
-def run(rounds: int = 4) -> list[str]:
+def _as_f32(tree):
+    return jax.tree.map(lambda x: np.asarray(x, np.float32), tree)
+
+
+def run_rows(rounds: int = 4, tiny: bool = False) -> list[dict]:
     """Per workload: base-image cost (first snapshot) vs differencing cost
     (later snapshots) in bytes and wall time — Table II's shape: CPU-bound
     workloads diff to ~nothing, memory/disk-heavy ones pay for what they
-    wrote."""
-    lines = []
-    for name, (mutate, state0) in _mutators().items():
+    wrote.  Each round also plays the volunteer uplink: the "dep" update
+    is quantized and pushed as chunk deltas; sparse workloads move far
+    fewer deduped bytes than the dense int8 wire format."""
+    rows = []
+    for name, (mutate, state0) in _mutators(tiny).items():
         store = ChunkStore(chunk_bytes=1 << 14)     # 16 KiB blocks
         disks = DiskSet(store, keep_last=2)
         t0 = time.perf_counter()
@@ -101,8 +115,13 @@ def run(rounds: int = 4) -> list[str]:
         info_dep0 = disks.attach_dep("task", state0["dep"])
         base_wall = time.perf_counter() - t0
         base_total = info_base.new_bytes + info_dep0.new_bytes
+        # uplink: one volunteer streaming its quantized round update into
+        # a fresh server-side store (round 0 is the base image)
+        uplink_server = ChunkStore(chunk_bytes=1 << 14)
+        encoder = UplinkEncoder(chunk_bytes=1 << 14)
         state = state0
         snap_times, dep_bytes, base_bytes = [], [], []
+        up_moved, up_dedup, up_dense = [], [], []
         for i in range(rounds):
             state = mutate(state, i)
             t0 = time.perf_counter()
@@ -111,19 +130,72 @@ def run(rounds: int = 4) -> list[str]:
             snap_times.append(time.perf_counter() - t0)
             dep_bytes.append(dep_info.new_bytes)
             base_bytes.append(base_info.new_bytes)
+            upd = _as_f32(state["dep"])
+            comp, _ = grad_compress.compress(upd,
+                                             grad_compress.init_error(upd))
+            update = encoder.encode(comp)
+            moved, dedup = push_update(update, uplink_server,
+                                       client_id=name)
+            up_moved.append(moved)
+            up_dedup.append(dedup)
+            up_dense.append(update.dense_bytes)
         mem = _tree_bytes(state)
         diff_total = int(np.mean(dep_bytes)) + int(np.mean(base_bytes))
-        lines.append(csv_line(
-            f"table2.{name}", float(np.mean(snap_times)) * 1e6,
-            f"mem_bytes={mem};depdisk_delta={int(np.mean(dep_bytes))};"
-            f"vm_delta={int(np.mean(base_bytes))};"
-            f"base_bytes={base_total};base_wall_us={base_wall * 1e6:.0f};"
-            f"diff_bytes={diff_total};"
-            f"diff_ratio={diff_total / max(1, base_total):.4f};"
-            f"delta_objects={store.stats['delta_chunks']};"
-            f"rebased={store.stats['rebased']}"))
+        # diff rounds only: round 0 is the unavoidable base upload
+        u_moved = int(np.mean(up_moved[1:])) if rounds > 1 else up_moved[0]
+        u_dedup = int(np.mean(up_dedup[1:])) if rounds > 1 else up_dedup[0]
+        rows.append({
+            "name": name, "snap_us": float(np.mean(snap_times)) * 1e6,
+            "mem_bytes": mem,
+            "depdisk_delta": int(np.mean(dep_bytes)),
+            "vm_delta": int(np.mean(base_bytes)),
+            "base_bytes": base_total,
+            "base_wall_us": round(base_wall * 1e6),
+            "diff_bytes": diff_total,
+            "diff_ratio": round(diff_total / max(1, base_total), 4),
+            "delta_objects": store.stats["delta_chunks"],
+            "rebased": store.stats["rebased"],
+            "uplink_bytes": u_moved,
+            "uplink_dedup": u_dedup,
+            "uplink_dense": int(np.mean(up_dense)),
+            "uplink_base": up_moved[0],
+        })
+    return rows
+
+
+def _format(rows: list[dict]) -> list[str]:
+    lines = []
+    for r in rows:
+        derived = ";".join(f"{k}={r[k]}" for k in (
+            "mem_bytes", "depdisk_delta", "vm_delta", "base_bytes",
+            "base_wall_us", "diff_bytes", "diff_ratio", "delta_objects",
+            "rebased", "uplink_bytes", "uplink_dedup", "uplink_dense",
+            "uplink_base"))
+        lines.append(csv_line(f"table2.{r['name']}", r["snap_us"], derived))
     return lines
 
 
+def run(rounds: int = 4) -> list[str]:
+    return _format(run_rows(rounds))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smallest config (CI benchmark smoke)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as JSON (CI artifact)")
+    args = ap.parse_args(argv)
+    if args.rounds < 1:
+        ap.error("--rounds must be >= 1")
+    rows = run_rows(args.rounds, tiny=args.tiny)
+    print("\n".join(_format(rows)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "table2_snapshots", "rounds": args.rounds,
+                       "tiny": args.tiny, "rows": rows}, f, indent=2)
+
+
 if __name__ == "__main__":
-    print("\n".join(run()))
+    main()

@@ -161,7 +161,12 @@ class ChunkStore:
         self._lock = threading.Lock()
         self.stats = {"put_bytes": 0, "dedup_bytes": 0, "get_bytes": 0,
                       "put_chunks": 0, "dedup_chunks": 0,
-                      "delta_chunks": 0, "rebased": 0}
+                      "delta_chunks": 0, "rebased": 0,
+                      "ingest_bytes": 0, "ingest_dedup_bytes": 0,
+                      "ingest_records": 0}
+        # per-client uplink accounting (client id -> counters); the server
+        # credits volunteers by the deduped bytes they actually moved
+        self.uplinks: Dict[str, Dict[str, int]] = {}
 
     # -- raw object layer --------------------------------------------------
     def _path(self, h: str) -> Path:
@@ -260,7 +265,10 @@ class ChunkStore:
                           compressed).pack()
         if full_bytes is not None and len(rec) >= len(full_bytes):
             return self.put(full_bytes)   # delta no cheaper than a base
-        h = sha256(rec)
+        return self._write_delta(sha256(rec), rec, depth)
+
+    def _write_delta(self, h: str, rec: bytes, depth: int) -> str:
+        """Store a packed delta record under its content hash."""
         ref = DELTA_PREFIX + h
         with self._lock:
             if self.has(ref):
@@ -281,14 +289,17 @@ class ChunkStore:
         self._depths[ref] = depth
         return ref
 
-    def _get_delta(self, ref: str) -> DeltaRecord:
-        h = ref[len(DELTA_PREFIX):]
+    def _delta_bytes(self, h: str) -> bytes:
         if self.root is None or h in self._mem_delta:
             rec = self._mem_delta[h]
         else:
             rec = self._dpath(h).read_bytes()
         if sha256(rec) != h:
             raise IOError(f"delta {h[:12]} failed integrity check")
+        return rec
+
+    def _get_delta(self, ref: str) -> DeltaRecord:
+        rec = self._delta_bytes(ref[len(DELTA_PREFIX):])
         self.stats["get_bytes"] += len(rec)
         return DeltaRecord.unpack(rec)
 
@@ -367,6 +378,119 @@ class ChunkStore:
         moved = sum(self.object_size(r) for r in missing)
         dedup = sum(self.object_size(r) for r in needed if r in client_has)
         return missing, moved, dedup
+
+    # -- uplink (client -> server) -----------------------------------------
+    def export_records(self, refs: Iterable[str]) -> Dict[str, bytes]:
+        """Wire image of objects for an uplink push: ref -> packed bytes
+        (raw chunk bytes, or the packed delta record).  The receiving
+        store's ``ingest`` recomputes every hash, so the wire needs no
+        extra framing."""
+        out: Dict[str, bytes] = {}
+        for r in refs:
+            if is_delta_ref(r):
+                out[r] = self._delta_bytes(r[len(DELTA_PREFIX):])
+            else:
+                out[r] = self.get(r)
+        return out
+
+    def _client_log(self, client_id: str) -> Dict[str, int]:
+        return self.uplinks.setdefault(
+            client_id, {"bytes_in": 0, "bytes_dedup": 0, "records": 0,
+                        "rejected": 0})
+
+    def ingest_plan(self, offered: Dict[str, int], *,
+                    client_id: Optional[str] = None
+                    ) -> tuple[List[str], int, int]:
+        """Uplink mirror of ``transfer_plan``: which of a client's offered
+        objects this store still needs.
+
+        ``offered`` maps ref -> wire size as measured by the *client's*
+        store (the server cannot size objects it does not hold yet).
+        -> (needed refs, bytes to move up, bytes saved by dedup).  The
+        moved figure is the client's claim and is for *planning only*;
+        credit-bearing ``bytes_in`` accumulates in ``ingest`` from bytes
+        the server actually verified and wrote, so an inflated offer
+        cannot mint credit.  Dedup is sized from this store's own copies
+        (it holds them), so it is verified here."""
+        needed = sorted(r for r in offered if not self.has(r))
+        moved = sum(offered[r] for r in needed)
+        dedup = sum(self.object_size(r) for r in offered if self.has(r))
+        self.stats["ingest_dedup_bytes"] += dedup
+        if client_id is not None:
+            self._client_log(client_id)["bytes_dedup"] += dedup
+        return needed, moved, dedup
+
+    def ingest(self, records: Dict[str, bytes], *,
+               client_id: Optional[str] = None) -> int:
+        """Validate and store client-built objects (the uplink write path).
+
+        Every ref is recomputed from the record bytes (content addressing
+        doubles as integrity — a tampered upload cannot land under a valid
+        ref), and a delta record's parent must already exist here or
+        arrive in the same batch; records are applied parents-first so a
+        batch may carry a whole chain.  Returns bytes written (dedup'd
+        records cost nothing); raises ``IOError`` on a corrupt or
+        dangling record, writing none of the batch."""
+        raws: List[tuple[str, bytes]] = []
+        deltas: List[tuple[str, bytes, DeltaRecord]] = []
+        for r, b in records.items():
+            if is_delta_ref(r):
+                h = r[len(DELTA_PREFIX):]
+                if sha256(b) != h:
+                    raise IOError(f"ingest: delta {r[:14]} hash mismatch")
+                deltas.append((h, b, DeltaRecord.unpack(b)))
+            else:
+                if sha256(b) != r:
+                    raise IOError(f"ingest: chunk {r[:14]} hash mismatch")
+                raws.append((r, b))
+        # validate every chain before anything is written.  A delta's
+        # depth is hashed into the record, so a lied depth cannot be
+        # repaired, only rejected — accepting it would poison the
+        # ``max_chain`` accounting (depth-0 lies disable rebasing, huge
+        # ones force every later delta into a full copy).  Each parent
+        # must resolve to a known depth: already in this store, a raw
+        # chunk in this batch, or an earlier delta in this batch; no
+        # progress means a dangling or cyclic chain.
+        depth_of = {r: 0 for r, _ in raws}
+        todo = {DELTA_PREFIX + h: (h, b, rec) for h, b, rec in deltas}
+        ordered: List[tuple[str, bytes, int]] = []
+        while todo:
+            progressed = False
+            for ref, (h, b, rec) in list(todo.items()):
+                p = rec.parent
+                if self.has(p):
+                    want = self.ref_depth(p) + 1
+                elif p in depth_of:
+                    want = depth_of[p] + 1
+                else:
+                    continue
+                if rec.depth != want:
+                    raise IOError(f"ingest: delta d:{h[:12]} claims depth "
+                                  f"{rec.depth}, its chain says {want}")
+                depth_of[ref] = want
+                ordered.append((h, b, want))
+                del todo[ref]
+                progressed = True
+            if not progressed:
+                h = next(iter(todo.values()))[0]
+                raise IOError(f"ingest: delta d:{h[:12]} has a dangling "
+                              f"or cyclic parent chain")
+        written = 0
+        for r, b in raws:
+            if not self.has(r):
+                written += len(b)
+            self.put(b)
+        for h, b, depth in ordered:
+            if not self.has(DELTA_PREFIX + h):
+                written += len(b)
+            self._write_delta(h, b, depth)
+        self.stats["ingest_bytes"] += written
+        self.stats["ingest_records"] += len(records)
+        if client_id is not None:
+            log = self._client_log(client_id)
+            log["records"] += len(records)
+            log["bytes_in"] += written    # verified bytes, not the claim
+        return written
 
     def gc(self, live: set[str]) -> int:
         """Delete all objects not in the closure of ``live``; returns count

@@ -24,6 +24,7 @@ import numpy as np
 from repro.core.control import CapsuleRuntime, Coordinator, HostSupervisor
 from repro.core.scheduler import SimClock, VolunteerScheduler
 from repro.core.snapshots import SnapshotManager
+from repro.core.uplink import DEFAULT_UPLINK_CHUNK, UplinkEncoder
 from repro.data.pipeline import Cursor, DataConfig, TokenStream
 
 
@@ -55,6 +56,10 @@ class RoundStats:
     duplicates: int
     invalid: int
     snapshot_bytes: int = 0
+    # delta-aware uplink accounting (0 unless uplink mode is on)
+    uplink_dense: int = 0        # int8 payload had volunteers sent it whole
+    uplink_moved: int = 0        # deduped bytes actually transferred up
+    uplink_dedup: int = 0        # bytes the server already held
 
 
 class VolunteerTrainer:
@@ -65,13 +70,27 @@ class VolunteerTrainer:
                  scheduler: Optional[VolunteerScheduler] = None,
                  snapshots: Optional[SnapshotManager] = None,
                  snapshot_every: int = 0, seed: int = 0,
-                 compress_grads: bool = False):
+                 compress_grads: bool = False,
+                 server=None, project: Optional[str] = None,
+                 uplink: bool = False,
+                 uplink_chunk_bytes: int = DEFAULT_UPLINK_CHUNK,
+                 uplink_mode: str = "auto"):
         """grad_fn(params, batch)->(loss, grads); apply_fn(state, grads)->state.
 
         ``compress_grads``: int8 + error-feedback compression of the combined
         gradient before the optimizer — the volunteer-uplink analogue of the
         cross-pod trick in optim/grad_compress.py (4x fewer bytes a volunteer
-        would upload; the residual is carried on the coordinator)."""
+        would upload; the residual is carried on the coordinator).
+
+        ``uplink``: the delta-aware upload path.  Each worker quantizes its
+        unit gradient to int8 (stateless, so replicas agree bitwise), diffs
+        the quantized image against its own previous round with the
+        probe-then-gather kernel, and reports delta refs through
+        ``server.report_result`` — only objects the server lacks move, and
+        workers are credited by the deduped bytes they actually
+        transferred.  Requires ``server`` (a VBoincServer) + ``project``
+        (published there); the project's scheduler is used so quorum
+        validation and uplink folding share one unit table."""
         self.grad_fn = grad_fn
         self.apply_fn = apply_fn
         self.compress_grads = compress_grads
@@ -79,6 +98,20 @@ class VolunteerTrainer:
         self.state = state
         self.stream = stream
         self.micro_batches = micro_batches
+        self.server = server
+        self.project = project
+        self.uplink = uplink
+        self.uplink_chunk_bytes = uplink_chunk_bytes
+        self.uplink_mode = uplink_mode
+        if uplink and (server is None or project is None):
+            raise ValueError("uplink mode needs server= and project=")
+        if server is not None and project is not None:
+            proj_sched = server.projects[project].scheduler
+            if scheduler is None:
+                scheduler = proj_sched
+            elif scheduler is not proj_sched:
+                raise ValueError("trainer scheduler must be the project's "
+                                 "scheduler when a server is attached")
         self.sched = scheduler or VolunteerScheduler(clock=SimClock())
         self.snapshots = snapshots
         self.snapshot_every = snapshot_every
@@ -87,6 +120,11 @@ class VolunteerTrainer:
         self.workers: Dict[str, SimWorker] = {}
         self._rng = np.random.default_rng(seed)
         self._grad_cache: Dict[str, tuple] = {}   # result_hash -> (loss, grads)
+        self._completed: Dict[int, str] = {}      # drained, not yet consumed
+        self._uplink_enc: Dict[str, UplinkEncoder] = {}   # per volunteer
+        self._round_uplink = [0, 0, 0]            # dense, moved, dedup
+        # unit -> {worker: (moved, dedup)} awaiting quorum validation
+        self._pending_credit: Dict[int, Dict[str, tuple]] = {}
         self.last_restore_plan: Optional[dict] = None
         self.history: List[RoundStats] = []
         # elastic membership: called when the fleet empties — a real
@@ -115,12 +153,64 @@ class VolunteerTrainer:
         batch = self.stream.batch(unit.payload["batch_index"])
         sub = {k: v for k, v in batch.items()}
         loss, grads = self.grad_fn(self.state.params, sub)
+        if self.uplink:
+            self._execute_unit_uplink(worker, unit, float(loss), grads)
+            return
         h = grad_hash(grads)
         if worker.rng.random() < worker.corrupt_prob:
             h = "corrupt-" + h[:16]        # wrong result; quorum rejects
         else:
             self._grad_cache[h] = (float(loss), grads)
         self.sched.report(worker.worker_id, unit.unit_id, h)
+
+    def _execute_unit_uplink(self, worker: SimWorker, unit,
+                             loss: float, grads) -> None:
+        """Report a unit as a quantized delta stream, not a bare hash.
+
+        Quantization is stateless per unit (no error feedback on the
+        worker) so replicated units agree bitwise and quorum validation
+        still works; the canonical gradient is the dequantized image the
+        server can itself reconstruct from the ingested refs."""
+        from repro.optim import grad_compress
+        wid = worker.worker_id
+        comp, _ = grad_compress.compress(grads, grad_compress.init_error(grads))
+        grads = grad_compress.decompress(comp, grads)
+        h = grad_hash(grads)
+        if worker.rng.random() < worker.corrupt_prob:
+            h = "corrupt-" + h[:16]        # wrong result; quorum rejects
+        else:
+            self._grad_cache[h] = (loss, grads)
+        enc = self._uplink_enc.setdefault(wid, UplinkEncoder(
+            chunk_bytes=self.uplink_chunk_bytes, mode=self.uplink_mode))
+        update = enc.encode(comp)
+        store = self.server.store
+        log0 = dict(store.uplinks.get(wid, {}))
+        self.server.report_result(self.project, wid, unit.unit_id, h,
+                                  update=update)
+        log1 = store.uplinks.get(wid, {})
+        enc.gc()        # the client store only needs the latest round
+        moved = log1.get("bytes_in", 0) - log0.get("bytes_in", 0)
+        dedup = log1.get("bytes_dedup", 0) - log0.get("bytes_dedup", 0)
+        self._round_uplink[0] += update.dense_bytes
+        self._round_uplink[1] += moved
+        self._round_uplink[2] += dedup
+        if moved or dedup:
+            # credit settles only after quorum validates this worker's
+            # result (_settle_uplink_credit) — an always-invalid worker
+            # must not farm transfer credit by pushing valid-looking bytes
+            self._pending_credit.setdefault(unit.unit_id, {})[wid] = (
+                moved, dedup)
+
+    def _settle_uplink_credit(self, drained) -> None:
+        """Grant deferred transfer credit for quorum-validated units:
+        only workers whose result matched the canonical hash earn by the
+        deduped bytes they moved."""
+        for uid, _h in drained:
+            unit = self.sched.units.get(uid)
+            for wid, (mv, dd) in self._pending_credit.pop(uid, {}).items():
+                if unit is not None \
+                        and unit.results.get(wid) == unit.canonical:
+                    self.sched.credit_transfer(wid, mv, dd)
 
     # ---------------- one synchronous round ----------------
     def round(self, step: int) -> RoundStats:
@@ -131,6 +221,7 @@ class VolunteerTrainer:
         self.cursor.next_index += self.micro_batches
 
         before = dict(self.sched.stats)
+        self._round_uplink = [0, 0, 0]
         guard = 0
         while not self.sched.done():
             guard += 1
@@ -163,12 +254,17 @@ class VolunteerTrainer:
                     if not any(w.alive for w in self.workers.values()):
                         raise RuntimeError("all volunteers died")
 
-        # combine validated canonical results
+        # combine validated canonical results — incremental view: drain
+        # only the units that completed since last round instead of
+        # scanning every unit ever submitted (canonical_results())
+        drained = self.sched.drain_completed()
+        self._settle_uplink_credit(drained)
+        self._completed.update(drained)
+        round_units = sorted(uid for uid in self._completed
+                             if uid // self.micro_batches == step)
         losses, grads = [], None
-        for uid, h in sorted(self.sched.canonical_results().items()):
-            if uid // self.micro_batches != step:
-                continue
-            loss, g = self._grad_cache[h]
+        for uid in round_units:
+            loss, g = self._grad_cache[self._completed.pop(uid)]
             losses.append(loss)
             grads = g if grads is None else jax.tree.map(
                 lambda a, b: a + b, grads, g)
@@ -189,6 +285,9 @@ class VolunteerTrainer:
             reissued=self.sched.stats["reissued"] - before["reissued"],
             duplicates=self.sched.stats["duplicates"] - before["duplicates"],
             invalid=self.sched.stats["invalid_results"] - before["invalid_results"],
+            uplink_dense=self._round_uplink[0],
+            uplink_moved=self._round_uplink[1],
+            uplink_dedup=self._round_uplink[2],
         )
         if (self.snapshots is not None and self.snapshot_every
                 and (step + 1) % self.snapshot_every == 0):

@@ -81,6 +81,8 @@ class WorkerInfo:
     credit: float = 0.0          # beyond-paper: the credit system V-BOINC defers
     completed: int = 0
     invalid: int = 0
+    uplink_bytes: int = 0        # deduped bytes this worker actually moved
+    uplink_dedup: int = 0        # bytes the server already held for it
     alive: bool = True
 
 
@@ -104,6 +106,10 @@ class VolunteerScheduler:
         # units — O(1) amortized per request instead of O(all units ever)
         self._open: deque[int] = deque()
         self._open_dirty = False
+        # incremental completion view: (unit_id, canonical hash) appended
+        # as quorums are met, drained by the trainer each round — the
+        # uplink analogue of the pending index (no O(all units) scans)
+        self._completed_log: List[tuple[int, str]] = []
         self.workers: Dict[str, WorkerInfo] = {}
         self.stats = {"dispatched": 0, "completed": 0, "reissued": 0,
                       "duplicates": 0, "rejected_requests": 0,
@@ -207,6 +213,7 @@ class VolunteerScheduler:
         if wu.quorum_met():
             wu.completed = True
             self._open_dirty = True
+            self._completed_log.append((unit_id, wu.canonical))
             self.stats["completed"] += 1
             for wid, h in wu.results.items():
                 info = self.workers.get(wid)
@@ -242,6 +249,26 @@ class VolunteerScheduler:
     def done(self) -> bool:
         self._prune_open()
         return not self._open
+
+    def drain_completed(self) -> List[tuple[int, str]]:
+        """(unit_id, canonical hash) pairs completed since the last drain.
+
+        O(newly completed), unlike ``canonical_results()``'s scan of every
+        unit ever submitted — the trainer's per-round result view."""
+        out, self._completed_log = self._completed_log, []
+        return out
+
+    def credit_transfer(self, worker_id: str, moved_bytes: int,
+                        dedup_bytes: int = 0) -> None:
+        """Uplink credit: BOINC grants credit for work *delivered*; here a
+        volunteer earns by the deduped bytes it actually moved (bytes the
+        server already held cost it nothing and earn nothing)."""
+        info = self.workers.get(worker_id)
+        if info is None:
+            return
+        info.uplink_bytes += moved_bytes
+        info.uplink_dedup += dedup_bytes
+        info.credit += moved_bytes / float(1 << 20)   # 1 credit per MiB
 
     def canonical_results(self) -> Dict[int, str]:
         return {uid: u.canonical for uid, u in self.units.items()

@@ -20,6 +20,7 @@ from repro.core.capsule import CapsuleSpec
 from repro.core.chunkstore import ChunkStore
 from repro.core.scheduler import VolunteerScheduler
 from repro.core.snapshots import SnapshotManager
+from repro.core.uplink import UplinkUpdate, decode_update, push_update
 
 
 @dataclass
@@ -32,6 +33,11 @@ class Project:
     # attached snapshot chain: a re-attaching volunteer syncs its state
     # blocks through the same fetch path as the capsule itself
     snapshots: Optional[SnapshotManager] = None
+    # delta-aware uplink: per-unit updates as they arrive, and the fold of
+    # the quorum winner (unit id -> the canonical worker's UplinkUpdate)
+    uplink_results: Dict[int, Dict[str, UplinkUpdate]] = field(
+        default_factory=dict)
+    canonical_updates: Dict[int, UplinkUpdate] = field(default_factory=dict)
 
 
 @dataclass
@@ -41,6 +47,14 @@ class TransferLog:
     requests: int = 0
 
 
+@dataclass
+class UplinkLog:
+    bytes_in: int = 0
+    bytes_dedup: int = 0
+    accepted: int = 0
+    rejected: int = 0
+
+
 class VBoincServer:
     """Registry + distribution endpoint ("modified BOINC server")."""
 
@@ -48,6 +62,7 @@ class VBoincServer:
         self.store = store
         self.projects: Dict[str, Project] = {}
         self.transfers: Dict[str, TransferLog] = {}
+        self.uplinks: Dict[str, UplinkLog] = {}   # per-project uplink log
         self.account_keys: Dict[str, str] = {}    # weak account keys
 
     def publish(self, project: Project) -> None:
@@ -105,10 +120,84 @@ class VBoincServer:
         return self.projects[project].scheduler.request_work(worker_id)
 
     def report_result(self, project: str, worker_id: str, unit_id: int,
-                      result_hash: str) -> bool:
-        """(7) results go back directly; server-side quorum validation."""
-        return self.projects[project].scheduler.report(
-            worker_id, unit_id, result_hash)
+                      result_hash: str,
+                      update: Optional[UplinkUpdate] = None) -> bool:
+        """(7) results go back directly; server-side quorum validation.
+
+        With ``update`` the volunteer streams its quantized gradient/state
+        delta through the chunk store instead of reporting a bare hash:
+        only objects the server lacks move up (``ingest_plan``), every
+        record is re-hashed, and the full chain is resolved before the
+        result counts — a corrupt or dangling upload is rejected without
+        touching the scheduler.  When the unit's quorum is met, the
+        canonical worker's refs are folded into the project's round state
+        (``canonical_updates``), which ``resolve_round_update`` serves."""
+        proj = self.projects[project]
+        if update is not None and not self._ingest_update(
+                proj, worker_id, unit_id, update):
+            return False
+        accepted = proj.scheduler.report(worker_id, unit_id, result_hash)
+        if accepted and unit_id in proj.uplink_results:
+            self._fold_canonical(proj, unit_id)
+        return accepted
+
+    def _ingest_update(self, proj: Project, worker_id: str, unit_id: int,
+                       update: UplinkUpdate) -> bool:
+        log = self.uplinks.setdefault(proj.name, UplinkLog())
+        try:
+            moved, dedup = push_update(update, self.store,
+                                       client_id=worker_id)
+        except (IOError, KeyError):
+            log.rejected += 1
+            return False
+        try:
+            decode_update(self.store, update)    # chain must fully resolve
+        except (IOError, KeyError):
+            # records landed (content-addressed, so harmless) but the
+            # update is undecodable — claw back the per-client accounting
+            # so the worker earns no transfer credit for a rejected result
+            clog = self.store.uplinks[worker_id]
+            clog["bytes_in"] -= moved
+            clog["bytes_dedup"] -= dedup
+            clog["rejected"] += 1
+            log.rejected += 1
+            return False
+        log.bytes_in += moved
+        log.bytes_dedup += dedup
+        log.accepted += 1
+        proj.uplink_results.setdefault(unit_id, {})[worker_id] = update
+        self._prune(proj.uplink_results)
+        return True
+
+    # retained folded rounds: enough for any validator/re-attach window,
+    # bounded so long trainings don't accumulate every round ever folded
+    UPLINK_KEEP = 256
+
+    def _prune(self, d: Dict[int, object]) -> None:
+        while len(d) > self.UPLINK_KEEP:      # oldest unit ids first
+            d.pop(next(iter(d)))
+
+    def _fold_canonical(self, proj: Project, unit_id: int) -> None:
+        unit = proj.scheduler.units.get(unit_id)
+        ups = proj.uplink_results.get(unit_id, {})
+        if unit is None or unit.canonical is None:
+            return
+        for wid, h in unit.results.items():
+            if h == unit.canonical and wid in ups:
+                proj.canonical_updates[unit_id] = ups[wid]
+                proj.uplink_results.pop(unit_id)   # replicas folded; drop
+                self._prune(proj.canonical_updates)
+                break
+
+    def resolve_round_update(self, project: str, unit_id: int):
+        """Fold a validated unit's delta refs into quantized leaves.
+
+        -> {keypath: Compressed} resolved against the SERVER's store — the
+        canonical round state the uplink reconstructs, proving the server
+        no longer depends on the volunteer re-shipping full gradients."""
+        proj = self.projects[project]
+        update = proj.canonical_updates[unit_id]
+        return decode_update(self.store, update)
 
     # ---- §IV-C capacity -----------------------------------------------
     def tasks_per_day_capacity(self, dispatch_us: float,

@@ -44,8 +44,7 @@ import jax
 import numpy as np
 
 from repro.core.chunkstore import ChunkStore, sha256
-from repro.kernels.delta_encode.ops import (TILE_BYTES, apply_tiles,
-                                            changed_blocks)
+from repro.kernels.delta_encode.ops import changed_blocks
 
 MANIFEST_VERSION = 2
 
@@ -217,27 +216,15 @@ class SnapshotManager:
             self._mirror[key] = host
             return _TensorPlan(key, shape, dtype, host.nbytes, base=host)
 
-        # delta path: device-side probe, transfer only changed tiles
-        tiles, bitmap, nbytes = changed_blocks(prev, leaf,
-                                               mode=self.delta_mode)
+        # delta path: device-side probe, transfer only changed tiles; the
+        # upload mode emits store-ready per-chunk XOR records (the same
+        # records the volunteer uplink encoder pushes through ingest)
+        records, new_flat, nbytes = changed_blocks(
+            prev, leaf, mode=self.delta_mode, emit="records", chunk_bytes=cb)
         plan = _TensorPlan(key, shape, dtype, nbytes)
-        changed_tiles = np.flatnonzero(bitmap)
-        if changed_tiles.size == 0:
+        if not records:
             return plan                  # nothing moved, nothing to store
-        old_flat = prev.reshape(-1).view(np.uint8)
-        new_flat = apply_tiles(old_flat.copy(), tiles, bitmap)
-        chunks: set[int] = set()
-        for ti in changed_tiles:
-            s = int(ti) * TILE_BYTES
-            e = min(s + TILE_BYTES, nbytes)
-            if e > s:
-                chunks.update(range(s // cb, (e - 1) // cb + 1))
-        for ci in sorted(chunks):
-            s, e = ci * cb, min((ci + 1) * cb, nbytes)
-            xor_arr = old_flat[s:e] ^ new_flat[s:e]
-            if not xor_arr.any():
-                continue       # tile changed, but not this chunk's bytes
-            plan.deltas[ci] = xor_arr.tobytes()
+        plan.deltas = records
         self._mirror[key] = new_flat.view(prev.dtype).reshape(shape)
         return plan
 

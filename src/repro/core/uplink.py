@@ -1,0 +1,192 @@
+"""Delta-aware volunteer uplink: quantized round updates as store objects.
+
+PR 1 made the *downlink* pay only changed blocks (``transfer_plan``); this
+module closes the loop for the uplink.  A volunteer's per-round
+gradient/optimizer update is first quantized to int8 with per-block scales
+(``optim/grad_compress`` — the dense wire format), then the quantized byte
+image is diffed against the volunteer's previous round with the same
+probe-then-gather kernel the snapshot path uses
+(``kernels/delta_encode.changed_blocks(emit="records")``), and only the
+changed chunks become chunk-store objects.  The XOR payload is computed
+over the *quantized* representation, so a sparse update — most gradient
+blocks unchanged, optimizer moments frozen — uploads a handful of RLE'd
+delta records instead of the full int8 payload.
+
+Protocol (in-process analogue of the two-round-trip wire exchange):
+
+1. client ``encode()`` writes the round's objects into its *local* store
+   and returns an ``UplinkUpdate`` (refs + leaf metadata + a handle to
+   that store);
+2. server ``ingest_plan`` answers which refs it lacks (per-client dedup:
+   two volunteers pushing the same zero-chunk move it once);
+3. client ``export_records`` ships exactly those; server ``ingest``
+   re-hashes every record and refuses dangling chains.
+
+``decode_update`` is the server-side fold: resolve each ref chain back to
+the quantized image and rebuild the ``Compressed`` leaves — the canonical
+round state a re-attaching volunteer (or the validator) reads.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.chunkstore import ChunkStore
+from repro.kernels.delta_encode.ops import changed_blocks
+from repro.optim.grad_compress import BLOCK, Compressed
+
+DEFAULT_UPLINK_CHUNK = 1 << 15           # 32 KiB uplink chunks
+
+
+@dataclass
+class LeafMeta:
+    """Shape/dtype sidecar so the server can rebuild ``Compressed`` leaves."""
+    shape: tuple
+    dtype: str
+    blocks: int                          # int8 quantization blocks
+
+    @property
+    def q_bytes(self) -> int:
+        return self.blocks * BLOCK
+
+    @property
+    def image_bytes(self) -> int:        # q int8 payload + f32 scales
+        return self.blocks * (BLOCK + 4)
+
+
+@dataclass
+class UplinkUpdate:
+    """One volunteer round update: per-leaf refs into the client store."""
+    refs: Dict[str, List[str]]
+    meta: Dict[str, LeafMeta]
+    dense_bytes: int                     # int8+scale wire bytes, no dedup
+    store: ChunkStore                    # client-local store holding them
+
+    def all_refs(self) -> List[str]:
+        return [r for refs in self.refs.values() for r in refs]
+
+
+def leaf_image(comp: Compressed) -> np.ndarray:
+    """Flat uint8 image of one quantized leaf: q int8 bytes + f32 scales."""
+    q = np.ascontiguousarray(np.asarray(comp.q, np.int8))
+    scale = np.ascontiguousarray(np.asarray(comp.scale, np.float32))
+    return np.concatenate([q.reshape(-1).view(np.uint8),
+                           scale.reshape(-1).view(np.uint8)])
+
+
+def flatten_compressed(comp_tree) -> Dict[str, tuple[Compressed, str]]:
+    """keypath -> Compressed leaf, keyed like snapshot manifests."""
+    import jax
+    leaves = jax.tree_util.tree_flatten_with_path(
+        comp_tree, is_leaf=lambda x: isinstance(x, Compressed))[0]
+    return {jax.tree_util.keystr(p): l for p, l in leaves}
+
+
+class UplinkEncoder:
+    """Client-side differencing encoder; one per volunteer.
+
+    Keeps the previous round's quantized byte image (host mirror) and the
+    refs it stored, exactly like ``SnapshotManager`` does for state — the
+    uplink is the snapshot pipeline pointed the other way."""
+
+    def __init__(self, *, chunk_bytes: int = DEFAULT_UPLINK_CHUNK,
+                 max_chain: int = 8, mode: str = "auto",
+                 store: ChunkStore | None = None):
+        self.store = store or ChunkStore(chunk_bytes=chunk_bytes,
+                                         max_chain=max_chain)
+        self.mode = mode
+        self._mirror: Dict[str, np.ndarray] = {}
+        self._prev_refs: Dict[str, List[str]] = {}
+
+    def encode(self, comp_tree) -> UplinkUpdate:
+        """Encode one round's quantized update into store objects."""
+        cb = self.store.chunk_bytes
+        refs: Dict[str, List[str]] = {}
+        meta: Dict[str, LeafMeta] = {}
+        dense = 0
+        for key, comp in flatten_compressed(comp_tree).items():
+            img = leaf_image(comp)
+            dense += img.size
+            blocks = int(np.asarray(comp.scale).reshape(-1).size)
+            meta[key] = LeafMeta(tuple(np.asarray(comp.q).shape),
+                                 str(np.asarray(comp.q).dtype), blocks)
+            prev = self._mirror.get(key)
+            if prev is None or prev.size != img.size \
+                    or key not in self._prev_refs:
+                self._mirror[key] = img.copy()
+                refs[key] = self.store.put_buffer(memoryview(img))
+                self._prev_refs[key] = refs[key]
+                continue
+            # the image is blocks*(BLOCK+4) bytes — always 4-aligned — so
+            # view it as int32: uint8 is not a kernel dtype and would
+            # silently fall back to the host ref differ on TPU
+            records, new_flat, nbytes = changed_blocks(
+                prev.view(np.int32), img.view(np.int32), mode=self.mode,
+                emit="records", chunk_bytes=cb)
+            out: List[str] = []
+            for ci, pref in enumerate(self._prev_refs[key]):
+                xor = records.get(ci)
+                if xor is None:
+                    out.append(pref)
+                else:
+                    s, e = ci * cb, min((ci + 1) * cb, nbytes)
+                    out.append(self.store.put_delta(
+                        pref, xor, full_bytes=new_flat[s:e].tobytes()))
+            self._mirror[key] = new_flat
+            refs[key] = out
+            self._prev_refs[key] = out
+        return UplinkUpdate(refs, meta, dense, self.store)
+
+    def gc(self) -> int:
+        """Drop everything but the latest round's closure from the local
+        store (a volunteer only ever diffs against its last round)."""
+        live = {r for refs in self._prev_refs.values() for r in refs}
+        return self.store.gc(live)
+
+
+def push_update(update: UplinkUpdate, server_store: ChunkStore, *,
+                client_id: str) -> tuple[int, int]:
+    """Move one update into ``server_store``; only missing objects travel.
+
+    -> (bytes moved up, bytes saved by dedup).  Raises ``IOError`` when a
+    record fails validation (nothing is written).  Moved bytes come from
+    ``ingest``'s server-verified count, never the client's offered sizes,
+    so the accounting the scheduler credits cannot be inflated."""
+    closure = update.store.live_closure(update.all_refs())
+    offered = {r: update.store.object_size(r) for r in closure}
+    needed, _, dedup = server_store.ingest_plan(offered,
+                                                client_id=client_id)
+    try:
+        moved = server_store.ingest(update.store.export_records(needed),
+                                    client_id=client_id)
+    except Exception:
+        # nothing landed: claw the planned dedup back out of the client's
+        # credit accounting and mark the rejection
+        log = server_store.uplinks[client_id]
+        log["bytes_dedup"] -= dedup
+        log["rejected"] += 1
+        server_store.stats["ingest_dedup_bytes"] -= dedup
+        raise
+    return moved, dedup
+
+
+def decode_update(store: ChunkStore, update: UplinkUpdate
+                  ) -> Dict[str, Compressed]:
+    """Resolve an update's ref chains back into ``Compressed`` leaves.
+
+    Raises ``IOError``/``KeyError`` when a chain is broken or the resolved
+    image does not match the leaf metadata — the server's chain
+    validation."""
+    out: Dict[str, Compressed] = {}
+    for key, refs in update.refs.items():
+        m = update.meta[key]
+        img = store.resolve_buffer(refs)
+        if len(img) != m.image_bytes:
+            raise IOError(f"uplink leaf {key}: resolved {len(img)} bytes, "
+                          f"expected {m.image_bytes}")
+        q = np.frombuffer(img[:m.q_bytes], np.int8).reshape(m.blocks, BLOCK)
+        scale = np.frombuffer(img[m.q_bytes:], np.float32)
+        out[key] = Compressed(q, scale)
+    return out

@@ -59,7 +59,8 @@ def patch_blocks(old, changed_tiles, bitmap, *, mode: str = "interpret"):
     return np.asarray(out)
 
 
-def changed_blocks(old, new, *, mode: str = "auto"):
+def changed_blocks(old, new, *, mode: str = "auto", emit: str = "tiles",
+                   chunk_bytes: int = 0):
     """Probe-then-gather diff of one tensor.
 
     -> (changed_tiles (k, 8, 1024) i32 numpy, bitmap (nblk,) i32 numpy,
@@ -67,7 +68,16 @@ def changed_blocks(old, new, *, mode: str = "auto"):
     otherwise), "tpu", "interpret" (Pallas interpreter), or "ref".
     On the kernel paths only the bitmap and the k changed tiles are
     transferred to host.
+
+    ``emit="records"`` is the *upload* mode: instead of raw tiles it
+    returns ``(records, new_flat, nbytes)`` where ``records`` maps
+    store-chunk index -> XOR bytes for exactly the chunks whose bytes
+    changed — the per-chunk payloads ``ChunkStore.put_delta``/``ingest``
+    expect — and ``new_flat`` is the updated uint8 host image (the
+    caller's next mirror).  Requires ``chunk_bytes``.  Both the snapshot
+    differencing path and the volunteer uplink encoder ride this mode.
     """
+    host_old = old
     mode = _resolve_mode(mode)
     nbytes = int(old.nbytes) if hasattr(old, "nbytes") \
         else int(np.asarray(old).nbytes)
@@ -76,24 +86,64 @@ def changed_blocks(old, new, *, mode: str = "auto"):
     if mode == "ref":
         delta, bitmap = delta_encode_ref(old, new)
         tiles = delta[bitmap.astype(bool)]
+    else:
+        import jax
+        import jax.numpy as jnp
+        interpret = (mode == "interpret")
+        old = jax.device_put(old)         # upload the mirror ONCE; both
+        bm, _ = changed_bitmap(old, new, interpret=interpret)  # passes reuse
+        bitmap = np.asarray(bm)           # tiny: one i32 per 32 KiB
+        idx = np.flatnonzero(bitmap)
+        k = idx.size
+        if k == 0:
+            tiles = np.zeros((0, SUB, LANE), np.int32)
+        else:
+            # pad the gather index to the next power of two so gather_delta
+            # sees O(log n) distinct shapes instead of recompiling per
+            # changed-tile count
+            padded = 1 << (k - 1).bit_length()
+            idx = np.concatenate([idx,
+                                  np.full(padded - k, idx[-1], idx.dtype)])
+            tiles = np.asarray(gather_delta(old, new,
+                                            jnp.asarray(idx, jnp.int32)))[:k]
+    if emit == "tiles":
         return tiles, bitmap, nbytes
-    import jax
-    import jax.numpy as jnp
-    interpret = (mode == "interpret")
-    old = jax.device_put(old)             # upload the mirror ONCE; both
-    bm, _ = changed_bitmap(old, new, interpret=interpret)  # passes reuse it
-    bitmap = np.asarray(bm)               # tiny: one i32 per 32 KiB
-    idx = np.flatnonzero(bitmap)
-    k = idx.size
-    if k == 0:
-        return np.zeros((0, SUB, LANE), np.int32), bitmap, nbytes
-    # pad the gather index to the next power of two so gather_delta sees
-    # O(log n) distinct shapes instead of recompiling per changed-tile count
-    padded = 1 << (k - 1).bit_length()
-    idx = np.concatenate([idx, np.full(padded - k, idx[-1], idx.dtype)])
-    tiles = np.asarray(gather_delta(old, new,
-                                    jnp.asarray(idx, jnp.int32)))[:k]
-    return tiles, bitmap, nbytes
+    if emit != "records":
+        raise ValueError(f"unknown emit mode {emit!r}")
+    if chunk_bytes <= 0:
+        raise ValueError("emit='records' requires chunk_bytes")
+    records, new_flat = chunk_records(np.asarray(host_old), tiles, bitmap,
+                                      nbytes, chunk_bytes)
+    return records, new_flat, nbytes
+
+
+def chunk_records(prev: np.ndarray, tiles: np.ndarray, bitmap: np.ndarray,
+                  nbytes: int, chunk_bytes: int):
+    """Compact changed tiles into store-ready per-chunk XOR records.
+
+    -> (records: {chunk index -> XOR bytes}, new_flat uint8 image).
+    Tiles (32 KiB probe granules) rarely align with store chunks; a chunk
+    is recorded only when its bytes actually differ, so a tile flip that
+    straddles two chunks but only dirties one emits one record.
+    """
+    old_flat = np.ascontiguousarray(prev).reshape(-1).view(np.uint8)
+    if not bitmap.any():
+        return {}, old_flat    # unchanged leaf: no records, no host copy
+    new_flat = apply_tiles(old_flat.copy(), tiles, bitmap)
+    records: dict[int, bytes] = {}
+    chunks: set[int] = set()
+    for ti in np.flatnonzero(bitmap):
+        s = int(ti) * TILE_BYTES
+        e = min(s + TILE_BYTES, nbytes)
+        if e > s:
+            chunks.update(range(s // chunk_bytes,
+                                (e - 1) // chunk_bytes + 1))
+    for ci in sorted(chunks):
+        s, e = ci * chunk_bytes, min((ci + 1) * chunk_bytes, nbytes)
+        xor = old_flat[s:e] ^ new_flat[s:e]
+        if xor.any():
+            records[ci] = xor.tobytes()
+    return records, new_flat
 
 
 def tree_changed_blocks(old_tree, new_tree, *, mode: str = "auto"):

@@ -69,6 +69,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8+error-feedback gradient compression (4x "
                          "smaller volunteer result uploads)")
+    ap.add_argument("--uplink", action="store_true",
+                    help="delta-aware upload path: volunteers stream "
+                         "quantized gradient deltas through the server's "
+                         "chunk store; only changed blocks move up")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -103,11 +107,25 @@ def main(argv=None) -> dict:
                                clock=SimClock())
     state = api.TrainState(init_tree(specs.params, jax.random.key(args.seed)),
                            init_tree(specs.opt, jax.random.key(args.seed)))
+
+    server = None
+    if args.uplink:
+        # the volunteer project server: results come back as delta refs
+        # through its chunk store instead of bare hashes
+        from repro.core.capsule import CapsuleSpec
+        from repro.core.server import Project, VBoincServer
+        server = VBoincServer(ChunkStore())
+        spec = CapsuleSpec(args.arch, "train_4k", run, arch_override=cfg)
+        server.publish(Project("train", spec, scheduler=sched))
+        server.register_user("launcher")
+
     trainer = VolunteerTrainer(
         grad_fn=grad_fn, apply_fn=apply_fn, state=state, stream=stream,
         micro_batches=args.micro, scheduler=sched, snapshots=snaps,
         snapshot_every=args.snapshot_every, seed=args.seed,
-        compress_grads=args.compress_grads)
+        compress_grads=args.compress_grads,
+        server=server, project="train" if server else None,
+        uplink=args.uplink)
 
     start_step = 0
     if args.resume:
@@ -149,10 +167,12 @@ def main(argv=None) -> dict:
             spawn(args.workers - alive)
         st = trainer.round(s)
         if s % args.log_every == 0:
+            up = (f" up {st.uplink_moved}/{st.uplink_dense}"
+                  if args.uplink else "")
             print(f"step {st.step:4d} loss {st.loss:.4f} "
                   f"units {st.units} reissued {st.reissued} "
                   f"dup {st.duplicates} invalid {st.invalid} "
-                  f"snap_bytes {st.snapshot_bytes}")
+                  f"snap_bytes {st.snapshot_bytes}{up}")
     wall = time.time() - t0
     tokens = args.steps * args.micro * args.batch * args.seq
     summary = {
@@ -163,6 +183,18 @@ def main(argv=None) -> dict:
         "store": dict(store.stats),
         "alive_workers": sum(w.alive for w in trainer.workers.values()),
     }
+    if server is not None:
+        log = server.uplinks.get("train")
+        hist = trainer.history
+        summary["uplink"] = {
+            "bytes_in": log.bytes_in if log else 0,
+            "bytes_dedup": log.bytes_dedup if log else 0,
+            "accepted": log.accepted if log else 0,
+            "rejected": log.rejected if log else 0,
+            "dense_bytes": sum(h.uplink_dense for h in hist),
+            "worker_credit": {w: round(i.credit, 3) for w, i in
+                              trainer.sched.workers.items()},
+        }
     print(json.dumps(summary, indent=2))
     if root is not None:
         (root / "summary.json").write_text(json.dumps(summary))

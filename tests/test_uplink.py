@@ -1,0 +1,425 @@
+"""Delta-aware uplink tests: store written from BOTH ends.
+
+Concurrent-writer invariants (two clients against one parent, chain-cap
+rebase racing GC, v1→v2 restore after an uplink-written round), the
+encode → ingest_plan → ingest → resolve protocol, server-side quorum
+folding, and the trainer's round loop with per-worker uplink credit.
+"""
+import threading
+from typing import NamedTuple
+
+import numpy as np
+import pytest
+
+from repro.core.chunkstore import ChunkStore, is_delta_ref
+from repro.core.elastic import SimWorker, VolunteerTrainer
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.snapshots import Manifest, SnapshotManager
+from repro.core.uplink import (UplinkEncoder, decode_update, leaf_image,
+                               push_update)
+from repro.optim import grad_compress
+
+
+def _xor(a: bytes, b: bytes) -> bytes:
+    return (np.frombuffer(a, np.uint8) ^ np.frombuffer(b, np.uint8)).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# concurrent-writer store invariants
+# ---------------------------------------------------------------------------
+def test_two_clients_put_delta_against_same_parent():
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    server = ChunkStore(chunk_bytes=1 << 12)
+    parent = server.put(base)
+
+    results = {}
+    for cid, pos in (("volA", 7), ("volB", 2049)):
+        client = ChunkStore(chunk_bytes=1 << 12)
+        assert client.put(base) == parent          # shared ancestry
+        new = bytearray(base)
+        new[pos] ^= 0xFF
+        ref = client.put_delta(parent, _xor(base, bytes(new)),
+                               full_bytes=bytes(new))
+        assert is_delta_ref(ref)
+        offered = {r: client.object_size(r)
+                   for r in client.live_closure([ref])}
+        needed, moved, dedup = server.ingest_plan(offered, client_id=cid)
+        assert parent not in needed                # server already holds it
+        server.ingest(client.export_records(needed), client_id=cid)
+        results[cid] = (ref, bytes(new))
+
+    # both children of the same parent coexist and resolve bit-exactly
+    for cid, (ref, want) in results.items():
+        assert server.resolve(ref) == want
+        assert server.uplinks[cid]["bytes_in"] > 0
+
+    # a third client replaying volA's exact delta moves ZERO bytes
+    replay = ChunkStore(chunk_bytes=1 << 12)
+    replay.put(base)
+    ref = replay.put_delta(parent, _xor(base, results["volA"][1]))
+    offered = {r: replay.object_size(r) for r in replay.live_closure([ref])}
+    needed, moved, dedup = server.ingest_plan(offered, client_id="volC")
+    assert not needed and moved == 0 and dedup > 0
+
+
+def test_chain_cap_rebase_races_gc():
+    store = ChunkStore(chunk_bytes=1 << 12, max_chain=3)
+    rng = np.random.default_rng(1)
+    data = rng.integers(0, 256, 4096, dtype=np.uint8).tobytes()
+    head = [store.put(data)]
+    lock = threading.Lock()      # the server's request serialization point
+    stop = threading.Event()
+    errors = []
+
+    def collector():
+        while not stop.is_set():
+            try:
+                with lock:
+                    store.gc({head[0]})
+            except Exception as e:        # pragma: no cover - fail loudly
+                errors.append(e)
+                return
+
+    t = threading.Thread(target=collector)
+    t.start()
+    cur = data
+    try:
+        for i in range(150):              # 150/3 -> dozens of rebases
+            new = bytearray(cur)
+            new[i % 4096] ^= 0xFF
+            new = bytes(new)
+            with lock:
+                head[0] = store.put_delta(head[0], _xor(cur, new),
+                                          full_bytes=new)
+            cur = new
+    finally:
+        stop.set()
+        t.join()
+    assert not errors
+    assert store.stats["rebased"] > 10
+    assert store.ref_depth(head[0]) <= 3
+    assert store.resolve(head[0]) == cur   # GC never ate a live parent
+
+
+def test_v1_to_v2_restore_after_uplink_round():
+    """An uplink-written round must not disturb v1 restores, and v2
+    snapshots taken afterwards share the same store."""
+    import json
+
+    store = ChunkStore(chunk_bytes=1 << 12)
+    arr = np.arange(8_000, dtype=np.float32)
+    hashes = store.put_buffer(memoryview(arr).cast("B"))
+    v1 = json.dumps({
+        "snapshot_id": "snap-000001-cafef00d", "parent": None,
+        "step": 1, "created": 0.0, "kind": "base",
+        "aux": {"cursor": {"next_index": 2}},
+        "tensors": {"['x']": {"shape": [8000], "dtype": "float32",
+                              "hashes": hashes}},
+    })
+
+    # a volunteer round lands delta objects in the same store
+    g = {"w": np.random.default_rng(2).standard_normal(50_000)
+         .astype(np.float32)}
+    enc = UplinkEncoder(chunk_bytes=1 << 12)
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    push_update(enc.encode(comp), store, client_id="vol")
+    g["w"][3] += 1.0
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    upd = enc.encode(comp)
+    push_update(upd, store, client_id="vol")
+    assert any(is_delta_ref(r) for r in upd.all_refs())
+
+    mgr = SnapshotManager(store, keep_last=10, auto_gc=False)
+    man = Manifest.from_json(v1)
+    mgr.manifests[man.snapshot_id] = man
+    mgr.order.append(man.snapshot_id)
+    got, aux = mgr.restore(target_tree={"x": np.zeros_like(arr)})
+    assert np.array_equal(got["x"], arr)           # v1 path intact
+    y = arr.copy()
+    y[77] = -1.0
+    mgr.snapshot({"x": y}, step=2)                 # v2 diff on the same store
+    got, _ = mgr.restore(target_tree={"x": np.zeros_like(arr)})
+    assert np.array_equal(got["x"], y)
+    assert decode_update(store, upd)               # uplink chains still live
+
+
+# ---------------------------------------------------------------------------
+# ingest validation: tampered + dangling records never land
+# ---------------------------------------------------------------------------
+def test_ingest_rejects_tampered_and_dangling_records():
+    server = ChunkStore(chunk_bytes=1 << 12)
+    client = ChunkStore(chunk_bytes=1 << 12)
+    base = bytes(np.random.default_rng(3).integers(0, 256, 4096,
+                                                   dtype=np.uint8))
+    parent = client.put(base)
+    new = bytearray(base)
+    new[1] ^= 0x55
+    ref = client.put_delta(parent, _xor(base, bytes(new)),
+                           full_bytes=bytes(new))
+
+    recs = client.export_records([ref, parent])
+    tampered = dict(recs)
+    tampered[ref] = tampered[ref][:-1] + bytes([tampered[ref][-1] ^ 1])
+    with pytest.raises(IOError):
+        server.ingest(tampered, client_id="evil")
+    assert not server.has(ref) and not server.has(parent)  # none landed
+
+    dangling = {ref: recs[ref]}            # delta without its parent
+    with pytest.raises(IOError):
+        server.ingest(dangling, client_id="evil")
+    server.ingest(recs, client_id="ok")    # the honest batch lands whole
+    assert server.resolve(ref) == bytes(new)
+
+
+# ---------------------------------------------------------------------------
+# encoder: sparse update moves less than the dense int8 payload
+# ---------------------------------------------------------------------------
+def test_uplink_sparse_update_beats_dense_wire():
+    rng = np.random.default_rng(4)
+    g = {"w": rng.standard_normal(200_000).astype(np.float32)}
+    enc = UplinkEncoder(chunk_bytes=1 << 12)
+    server = ChunkStore(chunk_bytes=1 << 12)
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    push_update(enc.encode(comp), server, client_id="vol")
+
+    g2 = {"w": g["w"].copy()}
+    g2["w"][:32] *= 2.0                          # one quantization block
+    comp2, _ = grad_compress.compress(g2, grad_compress.init_error(g2))
+    upd = enc.encode(comp2)
+    moved, dedup = push_update(upd, server, client_id="vol")
+    assert 0 < moved < upd.dense_bytes           # the acceptance bound
+    assert dedup > 0
+    # the server reconstructs the quantized image bit-exactly
+    dec = decode_update(server, upd)
+    for key, c in dec.items():
+        want = {"['w']": comp2["w"]}[key]
+        assert leaf_image(c).tobytes() == leaf_image(want).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# server: report_result(update=...) validates, dedups, folds canonical
+# ---------------------------------------------------------------------------
+def _server_with_project(quorum=2):
+    from repro.core.capsule import CapsuleSpec
+    from repro.core.server import Project, VBoincServer
+    from repro.models.lm import RunConfig
+
+    sched = VolunteerScheduler(replication=quorum, quorum=quorum,
+                               clock=SimClock())
+    server = VBoincServer(ChunkStore(chunk_bytes=1 << 12))
+    spec = CapsuleSpec("qwen2-1.5b", "train_4k", RunConfig())
+    server.publish(Project("toy", spec, scheduler=sched))
+    return server, sched
+
+
+def test_server_quorum_folds_canonical_update():
+    server, sched = _server_with_project(quorum=2)
+    g = {"w": np.random.default_rng(5).standard_normal(60_000)
+         .astype(np.float32)}
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    img = leaf_image(comp["w"]).tobytes()
+
+    sched.join("a")
+    sched.join("b")
+    sched.submit(0, {})
+    sched.request_work("a")
+    sched.request_work("b")
+    ups = {}
+    for wid in ("a", "b"):
+        enc = UplinkEncoder(chunk_bytes=1 << 12)
+        ups[wid] = enc.encode(comp)
+        assert server.report_result("toy", wid, 0, "H",
+                                    update=ups[wid]) == (wid == "b")
+    proj = server.projects["toy"]
+    assert 0 in proj.canonical_updates
+    dec = server.resolve_round_update("toy", 0)
+    assert leaf_image(dec["['w']"]).tobytes() == img
+    # identical quantized images: the second volunteer moved ~no new chunks
+    log = server.uplinks["toy"]
+    assert log.accepted == 2 and log.rejected == 0
+    assert server.store.uplinks["b"]["bytes_dedup"] > 0
+    assert (server.store.uplinks["b"]["bytes_in"]
+            < server.store.uplinks["a"]["bytes_in"] / 10)
+
+
+def test_ingest_rejects_lied_delta_depth():
+    """Depth is hashed into the record, so a lie survives the hash check;
+    ingest must still reject it or max_chain accounting is poisoned."""
+    from repro.core.chunkstore import DELTA_PREFIX, DeltaRecord, sha256
+
+    server = ChunkStore(chunk_bytes=1 << 12)
+    base = bytes(np.random.default_rng(7).integers(0, 256, 4096,
+                                                   dtype=np.uint8))
+    parent = server.put(base)
+    xor = bytes([1]) + bytes(4095)
+    for lied in (0, 7):          # true depth of a child of a raw ref is 1
+        rec = DeltaRecord(parent, lied, len(xor), xor, False).pack()
+        ref = DELTA_PREFIX + sha256(rec)
+        with pytest.raises(IOError, match="depth"):
+            server.ingest({ref: rec}, client_id="evil")
+        assert not server.has(ref)
+    honest = DeltaRecord(parent, 1, len(xor), xor, False).pack()
+    ref = DELTA_PREFIX + sha256(honest)
+    server.ingest({ref: honest}, client_id="ok")
+    assert server.ref_depth(ref) == 1
+
+
+def test_uplink_credit_waits_for_quorum():
+    """A worker whose result fails validation earns no transfer credit
+    even though its (valid-looking) bytes were ingested."""
+    from repro.core.capsule import CapsuleSpec
+    from repro.core.server import Project, VBoincServer
+    from repro.models.lm import RunConfig
+
+    sched = VolunteerScheduler(replication=3, quorum=2, clock=SimClock())
+    server = VBoincServer(ChunkStore(chunk_bytes=1 << 12))
+    spec = CapsuleSpec("qwen2-1.5b", "train_4k", RunConfig())
+    server.publish(Project("toy", spec, scheduler=sched))
+    state = _ToyState({"w": np.zeros(150_000, np.float32)})
+    tr = VolunteerTrainer(grad_fn=_toy_grad_fn, apply_fn=_toy_apply_fn,
+                          state=state, stream=_ToyStream(), micro_batches=1,
+                          server=server, project="toy", uplink=True,
+                          uplink_chunk_bytes=1 << 12)
+    liar = SimWorker("liar", corrupt_prob=1.0)
+    honest = [SimWorker("h0"), SimWorker("h1")]
+    for w in [liar] + honest:
+        tr.add_worker(w)
+    sched.submit(0, {})
+    unit = type("U", (), {"unit_id": 0})()
+    g = _toy_grad_fn(state.params, {"i": np.int64(0)})[1]
+    for w in [liar] + honest:
+        sched.request_work(w.worker_id)
+        tr._execute_unit_uplink(w, unit, 0.0, g)
+    tr._settle_uplink_credit(sched.drain_completed())
+    assert sched.workers["liar"].credit == 0.0        # bytes ingested, but
+    assert sched.workers["liar"].uplink_bytes == 0    # no credit granted
+    assert sched.workers["h0"].credit > 0 or sched.workers["h1"].credit > 0
+
+
+def test_inflated_offer_cannot_mint_credit():
+    """bytes_in comes from server-verified ingest bytes, never the
+    client's claimed sizes — an inflated offer earns nothing extra."""
+    server = ChunkStore(chunk_bytes=1 << 12)
+    client = ChunkStore(chunk_bytes=1 << 12)
+    data = bytes(np.random.default_rng(6).integers(0, 256, 4096,
+                                                   dtype=np.uint8))
+    ref = client.put(data)
+    needed, moved, _ = server.ingest_plan({ref: 10**12}, client_id="greedy")
+    assert moved == 10**12                 # the claim, planning only
+    server.ingest(client.export_records(needed), client_id="greedy")
+    assert server.uplinks["greedy"]["bytes_in"] == len(data)
+
+
+def test_decode_failure_claws_back_credit():
+    """An update that ingests cleanly but cannot decode (bad leaf meta)
+    is rejected AND earns no transfer credit."""
+    server, sched = _server_with_project(quorum=1)
+    g = {"w": np.ones(30_000, np.float32)}
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    upd = UplinkEncoder(chunk_bytes=1 << 12).encode(comp)
+    key = next(iter(upd.meta))
+    upd.meta[key].blocks += 1              # records valid, meta lies
+    sched.join("liar")
+    sched.submit(0, {})
+    sched.request_work("liar")
+    assert not server.report_result("toy", "liar", 0, "H", update=upd)
+    assert not sched.units[0].completed
+    assert server.uplinks["toy"].rejected == 1
+    log = server.store.uplinks["liar"]
+    assert log["bytes_in"] == 0 and log["bytes_dedup"] == 0
+    assert log["rejected"] == 1
+
+
+def test_server_rejects_corrupt_update_before_scheduler():
+    server, sched = _server_with_project(quorum=1)
+    g = {"w": np.ones(30_000, np.float32)}
+    comp, _ = grad_compress.compress(g, grad_compress.init_error(g))
+    enc = UplinkEncoder(chunk_bytes=1 << 12)
+    upd = enc.encode(comp)
+    # flip one bit inside the client store: export ships a record whose
+    # hash no longer matches its ref
+    h = next(iter(upd.store._mem))
+    upd.store._mem[h] = upd.store._mem[h][:-1] + bytes(
+        [upd.store._mem[h][-1] ^ 1])
+    sched.join("liar")
+    sched.submit(0, {})
+    sched.request_work("liar")
+    assert not server.report_result("toy", "liar", 0, "H", update=upd)
+    assert not sched.units[0].completed            # scheduler never saw it
+    assert server.uplinks["toy"].rejected == 1
+    assert server.store.uplinks["liar"]["bytes_in"] == 0   # clawed back
+
+
+# ---------------------------------------------------------------------------
+# scheduler: incremental completion view
+# ---------------------------------------------------------------------------
+def test_drain_completed_is_incremental():
+    s = VolunteerScheduler(clock=SimClock())
+    s.join("w")
+    for uid in range(3):
+        s.submit(uid, {})
+        s.request_work("w")
+        s.report("w", uid, "H")
+    assert s.drain_completed() == [(0, "H"), (1, "H"), (2, "H")]
+    assert s.drain_completed() == []               # drained, not re-scanned
+    s.submit(3, {})
+    s.request_work("w")
+    s.report("w", 3, "H")
+    assert s.drain_completed() == [(3, "H")]
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end: rounds stream deltas, credit tracks deduped bytes
+# ---------------------------------------------------------------------------
+class _ToyState(NamedTuple):
+    params: dict
+
+
+class _ToyStream:
+    def batch(self, i):
+        return {"i": np.int64(i)}
+
+
+def _toy_grad_fn(params, batch):
+    i = int(batch["i"])
+    g = np.zeros_like(params["w"])
+    g[(i * 3) % 8] = 1.0 + (i % 4) * 0.25          # sparse + deterministic
+    return float(i), {"w": g}
+
+
+def _toy_apply_fn(state, grads):
+    return _ToyState({"w": state.params["w"] - 0.1 * np.asarray(grads["w"])})
+
+
+def test_trainer_uplink_rounds_end_to_end():
+    server, sched = _server_with_project(quorum=1)
+    state = _ToyState({"w": np.zeros(150_000, np.float32)})
+    tr = VolunteerTrainer(grad_fn=_toy_grad_fn, apply_fn=_toy_apply_fn,
+                          state=state, stream=_ToyStream(), micro_batches=2,
+                          server=server, project="toy", uplink=True,
+                          uplink_chunk_bytes=1 << 12)
+    assert tr.sched is sched                       # one unit table
+    tr.add_worker(SimWorker("v0"))
+    tr.add_worker(SimWorker("v1"))
+    hist = tr.run(3)
+
+    # round 0 ships the base image; later rounds move only changed chunks
+    assert hist[0].uplink_moved > 0
+    for h in hist[1:]:
+        assert 0 < h.uplink_moved < h.uplink_dense
+        assert h.uplink_moved < hist[0].uplink_moved / 5
+    # per-worker credit follows deduped bytes actually moved
+    for wid in ("v0", "v1"):
+        info = sched.workers[wid]
+        assert info.uplink_bytes > 0
+        assert info.credit > info.completed        # transfer credit on top
+    # the server folded every unit and can reconstruct the canonical
+    # gradient (bit-identical to the hash the quorum validated)
+    proj = server.projects["toy"]
+    assert sorted(proj.canonical_updates) == list(range(6))
+    from repro.core.elastic import grad_hash
+    uid = 5
+    dec = server.resolve_round_update("toy", uid)
+    arr = grad_compress.decompress_leaf(dec["['w']"], (150_000,), np.float32)
+    assert grad_hash({"w": np.asarray(arr)}) == sched.units[uid].canonical
