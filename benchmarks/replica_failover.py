@@ -1,0 +1,145 @@
+"""Replication overhead + failover benchmark.
+
+Measures what the ReplicaSet costs and what it buys:
+
+* ``hot_us``       — snapshot wall time with replication attached (the hot
+  path only enqueues refs; compare against ``solo_us``, the same snapshot
+  stream into a bare ChunkStore — the gap is the enqueue overhead);
+* ``pump_us``      — off-path cost of fanning one round's objects to the
+  peers, and ``repl_bytes``, the verified bytes the peers ingested;
+* ``failover_us``  — kill-the-primary-with-disk-loss → promote the best
+  replica → resolve the latest snapshot end to end, byte-verified.
+
+Workload: a params+optimizer state where a sparse slice mutates per round
+(the Table II "memory" class) — the case replication must not slow down.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.chunkstore import ChunkStore
+from repro.core.replica import ReplicaSet
+from repro.core.snapshots import SnapshotManager
+
+CHUNK = 1 << 14
+
+
+def _state(n: int, seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    return {"params": rng.standard_normal(n).astype(np.float32),
+            "opt_m": np.zeros(n, np.float32)}
+
+
+def _mutate(state: dict, i: int) -> dict:
+    params = state["params"].copy()
+    params[i * 37 % params.size] += 1.0          # sparse touch
+    m = state["opt_m"].copy()
+    m[: m.size // 8] += 0.01                     # optimizer slice churn
+    return {"params": params, "opt_m": m}
+
+
+def run_rows(peers: int = 2, rounds: int = 4, n: int = 1 << 16) -> list[dict]:
+    # warm the diff path (lazy kernel/op setup) outside any timed region
+    warm = SnapshotManager(ChunkStore(chunk_bytes=CHUNK), keep_last=2)
+    warm.snapshot(_state(n), step=0)
+    warm.snapshot(_mutate(_state(n), 0), step=1)
+
+    # baseline: same snapshot stream into an unreplicated store
+    solo_mgr = SnapshotManager(ChunkStore(chunk_bytes=CHUNK), keep_last=4)
+    state = _state(n)
+    solo_mgr.snapshot(state, step=0)
+    solo_times = []
+    s = state
+    for i in range(rounds):
+        s = _mutate(s, i)
+        t0 = time.perf_counter()
+        solo_mgr.snapshot(s, step=i + 1)
+        solo_times.append(time.perf_counter() - t0)
+
+    # replicated: identical stream through a ReplicaSet
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(peers + 1)]
+    rs = ReplicaSet(stores[0], stores[1:])
+    mgr = SnapshotManager(rs, keep_last=4)
+    state = _state(n)
+    mgr.snapshot(state, step=0)
+    rs.flush()
+    hot_times, pump_times = [], []
+    s = state
+    for i in range(rounds):
+        s = _mutate(s, i)
+        t0 = time.perf_counter()
+        mgr.snapshot(s, step=i + 1)              # hot path: enqueue only
+        hot_times.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rs.pump()                                # off-path peer fan-out
+        pump_times.append(time.perf_counter() - t0)
+    repl_bytes = sum(m.stats["ingest_bytes"] for m in stores[1:])
+    report = rs.replication_report(
+        mgr.get_manifest(mgr.latest()).all_refs())
+
+    # failover: primary disk loss -> promote -> byte-verified restore
+    want = np.concatenate([s["params"].view(np.uint8),
+                           s["opt_m"].view(np.uint8)]).tobytes()
+    t0 = time.perf_counter()
+    rs.mark_down(0)
+    stores[0].wipe()
+    rs.promote_best()
+    got, _ = mgr.restore(target_tree={"params": np.zeros(n, np.float32),
+                                      "opt_m": np.zeros(n, np.float32)})
+    failover_s = time.perf_counter() - t0
+    restored = np.concatenate([got["params"].reshape(-1).view(np.uint8),
+                               got["opt_m"].reshape(-1).view(np.uint8)]
+                              ).tobytes()
+    assert restored == want, "failover restore diverged"
+
+    return [{
+        "name": f"x{peers + 1}",
+        "solo_us": float(np.mean(solo_times)) * 1e6,
+        "hot_us": float(np.mean(hot_times)) * 1e6,
+        "pump_us": float(np.mean(pump_times)) * 1e6,
+        "repl_bytes": repl_bytes,
+        "outbox_dropped": rs.rstats["outbox_dropped"],
+        "min_factor": report["min_factor"],
+        "failover_us": round(failover_s * 1e6),
+    }]
+
+
+def _format(rows: list[dict]) -> list[str]:
+    lines = []
+    for r in rows:
+        derived = ";".join(f"{k}={r[k]}" for k in (
+            "solo_us", "pump_us", "repl_bytes", "outbox_dropped",
+            "min_factor", "failover_us"))
+        lines.append(csv_line(f"replica.{r['name']}", r["hot_us"], derived))
+    return lines
+
+
+def run(rounds: int = 4) -> list[str]:
+    return _format(run_rows(rounds=rounds))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--peers", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--size", type=int, default=1 << 16,
+                    help="elements per state tensor")
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    if args.peers < 1 or args.rounds < 1:
+        ap.error("--peers and --rounds must be >= 1")
+    rows = run_rows(args.peers, args.rounds, args.size)
+    print("\n".join(_format(rows)))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "replica_failover", "peers": args.peers,
+                       "rounds": args.rounds, "rows": rows}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

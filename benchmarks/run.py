@@ -10,14 +10,16 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig3_overhead, fig4_sprint_pcor, roofline,
-                            server_throughput, table2_snapshots)
+    from benchmarks import (fig3_overhead, fig4_sprint_pcor,
+                            replica_failover, roofline, server_throughput,
+                            table2_snapshots)
 
     sections = [
         ("fig3 (benchmark overhead, 4 platforms)", fig3_overhead.run),
         ("fig4 (SPRINT pcor load/exec)", fig4_sprint_pcor.run),
         ("table2 (snapshot time/sizes)", table2_snapshots.run),
         ("server (§IV-C throughput)", server_throughput.run),
+        ("replica (fan-out + failover)", replica_failover.run),
         ("roofline (dry-run derived)", roofline.run),
     ]
     print("name,us_per_call,derived")

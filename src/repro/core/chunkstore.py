@@ -28,8 +28,10 @@ from __future__ import annotations
 
 import hashlib
 import os
+import shutil
 import struct
 import threading
+import time
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional
@@ -197,12 +199,20 @@ class ChunkStore:
             if self.root is None:
                 self._mem[h] = bytes(data)
             else:
-                p = self._path(h)
-                p.parent.mkdir(parents=True, exist_ok=True)
-                tmp = p.with_suffix(".tmp")
-                tmp.write_bytes(data)
-                os.replace(tmp, p)  # atomic publish
+                self._atomic_write(self._path(h), data)
         return h
+
+    @staticmethod
+    def _atomic_write(p: Path, data: bytes) -> None:
+        """Crash-consistent publish: write a uniquely-named temp file in the
+        same directory, then ``os.replace`` it into place.  A crash mid-write
+        leaves only a ``*.tmp`` orphan (never a torn object under a valid
+        ref); the pid suffix keeps concurrent writers from clobbering each
+        other's temp files."""
+        p.parent.mkdir(parents=True, exist_ok=True)
+        tmp = p.with_name(f"{p.name}.{os.getpid()}.tmp")
+        tmp.write_bytes(data)
+        os.replace(tmp, p)
 
     def get(self, h: str) -> bytes:
         if self.root is None or h in self._mem:
@@ -233,10 +243,13 @@ class ChunkStore:
         out = set(self._mem)
         out.update(DELTA_PREFIX + h for h in self._mem_delta)
         if self.root is not None:
+            # *.tmp orphans from a crashed writer are not objects
             for sub in (self.root / "objects").glob("*/*"):
-                out.add(sub.parent.name + sub.name)
+                if not sub.name.endswith(".tmp"):
+                    out.add(sub.parent.name + sub.name)
             for sub in (self.root / "deltas").glob("*/*"):
-                out.add(DELTA_PREFIX + sub.parent.name + sub.name)
+                if not sub.name.endswith(".tmp"):
+                    out.add(DELTA_PREFIX + sub.parent.name + sub.name)
         return out
 
     # kept for callers of the v1 API
@@ -281,11 +294,7 @@ class ChunkStore:
                 if self.root is None:
                     self._mem_delta[h] = rec
                 else:
-                    p = self._dpath(h)
-                    p.parent.mkdir(parents=True, exist_ok=True)
-                    tmp = p.with_suffix(".tmp")
-                    tmp.write_bytes(rec)
-                    os.replace(tmp, p)
+                    self._atomic_write(self._dpath(h), rec)
         self._depths[ref] = depth
         return ref
 
@@ -492,6 +501,36 @@ class ChunkStore:
             log["bytes_in"] += written    # verified bytes, not the claim
         return written
 
+    def wipe(self) -> None:
+        """Simulated disk loss: drop every object (fault injection — the
+        churn simulator's "the volunteer's disk died" event)."""
+        with self._lock:
+            self._mem.clear()
+            self._mem_delta.clear()
+            self._depths.clear()
+            if self.root is not None:
+                for sub in ("objects", "deltas"):
+                    shutil.rmtree(self.root / sub, ignore_errors=True)
+                    (self.root / sub).mkdir(parents=True, exist_ok=True)
+
+    def sweep_tmp(self, max_age_s: float = 60.0) -> int:
+        """Unlink ``*.tmp`` orphans left by crashed writers.  Only files
+        older than ``max_age_s`` go — a concurrent writer's in-flight temp
+        file (same directory, about to ``os.replace``) is never touched."""
+        if self.root is None:
+            return 0
+        now = time.time()
+        removed = 0
+        for sub in ("objects", "deltas"):
+            for p in (self.root / sub).glob("*/*.tmp"):
+                try:
+                    if now - p.stat().st_mtime >= max_age_s:
+                        p.unlink()
+                        removed += 1
+                except OSError:
+                    continue                 # raced a writer/another sweep
+        return removed
+
     def gc(self, live: set[str]) -> int:
         """Delete all objects not in the closure of ``live``; returns count
         removed.  (The closure keeps delta parents alive.)"""
@@ -499,6 +538,7 @@ class ChunkStore:
         dead = [r for r in self.all_refs() if r not in keep]
         for r in dead:
             self.delete(r)
+        self.sweep_tmp()
         return len(dead)
 
 

@@ -56,6 +56,7 @@ class RoundStats:
     duplicates: int
     invalid: int
     snapshot_bytes: int = 0
+    replicated: int = 0          # replication messages pumped this round
     # delta-aware uplink accounting (0 unless uplink mode is on)
     uplink_dense: int = 0        # int8 payload had volunteers sent it whole
     uplink_moved: int = 0        # deduped bytes actually transferred up
@@ -74,7 +75,8 @@ class VolunteerTrainer:
                  server=None, project: Optional[str] = None,
                  uplink: bool = False,
                  uplink_chunk_bytes: int = DEFAULT_UPLINK_CHUNK,
-                 uplink_mode: str = "auto"):
+                 uplink_mode: str = "auto",
+                 replicas=None):
         """grad_fn(params, batch)->(loss, grads); apply_fn(state, grads)->state.
 
         ``compress_grads``: int8 + error-feedback compression of the combined
@@ -90,7 +92,12 @@ class VolunteerTrainer:
         workers are credited by the deduped bytes they actually
         transferred.  Requires ``server`` (a VBoincServer) + ``project``
         (published there); the project's scheduler is used so quorum
-        validation and uplink folding share one unit table."""
+        validation and uplink folding share one unit table.
+
+        ``replicas``: a ``ReplicaSet`` whose primary backs the snapshot
+        store.  Snapshot/uplink writes only *enqueue* on the hot path; the
+        trainer pumps the outbox once per round, after the optimizer step
+        and snapshot complete, so peer I/O never blocks a round."""
         self.grad_fn = grad_fn
         self.apply_fn = apply_fn
         self.compress_grads = compress_grads
@@ -113,6 +120,7 @@ class VolunteerTrainer:
                 raise ValueError("trainer scheduler must be the project's "
                                  "scheduler when a server is attached")
         self.sched = scheduler or VolunteerScheduler(clock=SimClock())
+        self.replicas = replicas
         self.snapshots = snapshots
         self.snapshot_every = snapshot_every
         self.cursor = Cursor()
@@ -295,6 +303,9 @@ class VolunteerTrainer:
                 self.state, step=step,
                 aux={"cursor": self.cursor.to_state(), "round": step})
             stats.snapshot_bytes = info.new_bytes
+        if self.replicas is not None:
+            # fan this round's writes to the peers off the hot path
+            stats.replicated = self.replicas.pump()
         self.history.append(stats)
         return stats
 

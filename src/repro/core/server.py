@@ -199,6 +199,32 @@ class VBoincServer:
         update = proj.canonical_updates[unit_id]
         return decode_update(self.store, update)
 
+    # ---- replica failover ---------------------------------------------
+    def failover(self, index: Optional[int] = None) -> int:
+        """Primary store loss: mark it down and promote a replica so
+        ``fetch_capsule``/``report_result`` keep serving.
+
+        Requires the server's store to be a ``ReplicaSet``.  Promotes the
+        designated member ``index``, or the best-stocked alive replica when
+        omitted.  Returns the promoted member index — every registry,
+        scheduler and uplink table is untouched; only the object reads and
+        writes move to the survivor."""
+        store = self.store
+        if not hasattr(store, "promote_best"):
+            raise RuntimeError("failover needs a replicated store "
+                               "(ReplicaSet); this server has a single "
+                               "ChunkStore")
+        old = store.primary_index
+        store.mark_down(old)
+        try:
+            if index is None:
+                return store.promote_best()
+            store.promote(index)
+            return index
+        except (IndexError, ValueError, IOError):
+            store.mark_up(old)     # bad target must not brick the primary
+            raise
+
     # ---- §IV-C capacity -----------------------------------------------
     def tasks_per_day_capacity(self, dispatch_us: float,
                                validate_us: float) -> float:

@@ -1,0 +1,163 @@
+"""Deterministic churn fault injection for the replication subsystem.
+
+``ChurnSim`` drives a ``ReplicaSet`` through a scripted sequence of
+steps — snapshot/uplink work on the hot path, replication pumps, message
+delivery, and faults (kill/wipe/revive/promote, message drops, reordered
+delivery) — with every random choice drawn from one seeded generator, so
+a failing schedule replays bit-for-bit from its seed.
+
+Two instruments make the fault-injection suite's assertions possible:
+
+* **message interception** — the sim installs itself as the set's
+  ``transport``: pumped messages are captured in flight instead of being
+  applied, then delivered (optionally in scrambled order) at an explicit
+  ``deliver`` step.  ``drop(n)`` discards the next n sends, exercising the
+  retry path; down members black-hole their messages.
+* **step accounting** — every member's ``ingest`` is wrapped to log
+  ``(step, phase, member, primary_at_the_time, records)``.  Scripted steps
+  run in a named phase ("hot" for snapshot/training work, "net" for
+  pump/deliver, "fault" for churn events), so a test can assert that *no
+  peer ingest ever ran during a hot step* — replication adds zero blocking
+  I/O to the snapshot hot path.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.replica import ReplicaSet
+
+
+class ChurnSim:
+    """Scripted, seedable kill/revive/drop/reorder driver for a ReplicaSet."""
+
+    def __init__(self, replicas: ReplicaSet, seed: int = 0):
+        self.replicas = replicas
+        self.rng = np.random.default_rng(seed)
+        self.step = 0
+        self.phase = "idle"
+        self.in_flight: List[tuple[int, Dict[str, bytes]]] = []
+        self.drop_next = 0
+        self.events: List[tuple[int, str, object]] = []
+        # (step, phase, member, primary_index at log time, record count)
+        self.ingest_log: List[tuple[int, str, int, int, int]] = []
+        replicas.transport = self._transport
+        self._instrument()
+
+    # -- instrumentation ---------------------------------------------------
+    def _instrument(self) -> None:
+        for idx, member in enumerate(self.replicas.members):
+            member.ingest = self._wrap_ingest(idx, member.ingest)
+
+    def _wrap_ingest(self, idx: int, orig: Callable) -> Callable:
+        def ingest(records, *, client_id=None):
+            self.ingest_log.append((self.step, self.phase, idx,
+                                    self.replicas.primary_index,
+                                    len(records)))
+            return orig(records, client_id=client_id)
+        return ingest
+
+    def _transport(self, peer_index: int, records: Dict[str, bytes]) -> bool:
+        if peer_index in self.replicas._down:
+            self._log("blackhole", peer_index)
+            return False
+        if self.drop_next > 0:
+            self.drop_next -= 1
+            self._log("drop", peer_index)
+            return False
+        self.in_flight.append((peer_index, records))
+        self._log("send", peer_index)
+        return True
+
+    def _log(self, kind: str, detail: object) -> None:
+        self.events.append((self.step, kind, detail))
+
+    def _tick(self, phase: str) -> None:
+        self.step += 1
+        self.phase = phase
+
+    # -- scripted steps ----------------------------------------------------
+    def hot(self, fn: Callable[[], object]):
+        """Run snapshot/training work as a hot-path step; any peer I/O in
+        here is a failure the accounting will expose."""
+        self._tick("hot")
+        try:
+            return fn()
+        finally:
+            self.phase = "idle"
+
+    def pump(self, max_msgs: Optional[int] = None) -> int:
+        self._tick("net")
+        try:
+            return self.replicas.pump(max_msgs)
+        finally:
+            self.phase = "idle"
+
+    def deliver(self, shuffle: bool = True) -> int:
+        """Deliver captured in-flight messages, scrambled (seeded) when
+        ``shuffle`` — the reorder fault.  Chain-closure messages are
+        self-contained, so any order must converge."""
+        self._tick("net")
+        try:
+            msgs, self.in_flight = self.in_flight, []
+            if shuffle and len(msgs) > 1:
+                msgs = [msgs[i] for i in self.rng.permutation(len(msgs))]
+            delivered = 0
+            for peer_index, records in msgs:
+                if peer_index in self.replicas._down:
+                    self._log("lost", peer_index)
+                    continue
+                if self.replicas.deliver_direct(peer_index, records):
+                    delivered += 1
+            return delivered
+        finally:
+            self.phase = "idle"
+
+    def drop(self, n: int = 1) -> None:
+        """Discard the next ``n`` replication sends (retried next pump)."""
+        self.drop_next += n
+
+    def kill(self, index: int, wipe: bool = False) -> None:
+        """Mark a member down; ``wipe`` simulates full disk loss."""
+        self._tick("fault")
+        self.replicas.mark_down(index)
+        if wipe:
+            self.replicas.members[index].wipe()
+        self._log("kill", (index, wipe))
+        self.phase = "idle"
+
+    def revive(self, index: int, sync: bool = False) -> None:
+        self._tick("fault")
+        self.replicas.mark_up(index)
+        self._log("revive", index)
+        self.phase = "idle"
+        if sync:
+            self._tick("net")
+            self.replicas.sync()
+            self.deliver(shuffle=False)
+
+    def promote(self, index: Optional[int] = None) -> int:
+        self._tick("fault")
+        if index is None:
+            index = self.replicas.promote_best()
+        else:
+            self.replicas.promote(index)
+        self._log("promote", index)
+        self.phase = "idle"
+        return index
+
+    def settle(self, max_rounds: int = 32) -> None:
+        """Pump + deliver until the outbox and the wire are both empty."""
+        for _ in range(max_rounds):
+            if not self.replicas.outbox and not self.in_flight:
+                return
+            self.pump()
+            self.deliver(shuffle=False)
+
+    # -- accounting --------------------------------------------------------
+    def peer_ingests_during_hot_steps(self) -> List[tuple]:
+        """Log entries where a *non-primary* member did ingest I/O inside a
+        hot step.  Must be empty: the snapshot hot path only enqueues."""
+        return [e for e in self.ingest_log
+                if e[1] == "hot" and e[2] != e[3]]

@@ -326,6 +326,29 @@ class SnapshotManager:
             out.append(jax.device_put(a, sh) if sh is not None else a)
         return jax.tree_util.tree_unflatten(treedef, out), man.aux
 
+    def load_existing(self) -> int:
+        """Adopt manifests already on disk under ``root`` (a previous
+        process's chain) into this manager's order.
+
+        Ordered by ``(step, created)``, NOT filename: snapshot ids restart
+        per process, so a resumed run's newest snapshot can sort first by
+        name.  v1 (``hashes``) and v2 (``refs``) manifests mix freely in
+        one directory.  Returns the number of manifests adopted."""
+        if self.root is None:
+            raise ValueError("load_existing needs an on-disk root")
+        mans = [Manifest.from_json(p.read_text())
+                for p in sorted((self.root / "manifests").glob("*.json"))]
+        adopted = 0
+        for man in sorted(mans, key=lambda m: (m.step, m.created)):
+            if man.snapshot_id in self.manifests:
+                continue
+            self.manifests[man.snapshot_id] = man
+            self.order.append(man.snapshot_id)
+            adopted += 1
+        # new snapshots must not reuse an adopted id slot
+        self._counter = max(self._counter, len(self.order))
+        return adopted
+
     def get_manifest(self, sid: str) -> Manifest:
         """In-memory manifest, falling back to the on-disk copy."""
         man = self.manifests.get(sid)

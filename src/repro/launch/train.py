@@ -73,6 +73,10 @@ def main(argv=None) -> dict:
                     help="delta-aware upload path: volunteers stream "
                          "quantized gradient deltas through the server's "
                          "chunk store; only changed blocks move up")
+    ap.add_argument("--replicas", type=int, default=0,
+                    help="replicate snapshot chains to N peer stores "
+                         "(async, bounded outbox); the run survives a "
+                         "primary store loss")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -100,6 +104,14 @@ def main(argv=None) -> dict:
                                     seed=args.seed))
     root = Path(args.outdir) if args.outdir else None
     store = ChunkStore(root / "store" if root else None)
+    replicas = None
+    if args.replicas > 0:
+        from repro.core.replica import ReplicaSet
+        peers = [ChunkStore(root / f"replica{i}" if root else None)
+                 for i in range(args.replicas)]
+        # the set IS the snapshot store: writes land on the primary and
+        # fan out through the bounded outbox the trainer pumps per round
+        store = replicas = ReplicaSet(store, peers)
     snaps = SnapshotManager(store, root=root / "snaps" if root else None,
                             keep_last=3)
     sched = VolunteerScheduler(replication=args.replication,
@@ -125,20 +137,15 @@ def main(argv=None) -> dict:
         snapshot_every=args.snapshot_every, seed=args.seed,
         compress_grads=args.compress_grads,
         server=server, project="train" if server else None,
-        uplink=args.uplink)
+        uplink=args.uplink, replicas=replicas)
 
     start_step = 0
     if args.resume:
         if root is not None:
-            # pick up on-disk manifests from the previous process; order by
-            # (step, created), NOT filename — snapshot ids restart per
+            # pick up on-disk manifests from the previous process; ordered
+            # by (step, created), NOT filename — snapshot ids restart per
             # process, so a resumed run's newest snapshot can sort first
-            from repro.core.snapshots import Manifest
-            mans = [Manifest.from_json(p.read_text())
-                    for p in (root / "snaps" / "manifests").glob("*.json")]
-            for man in sorted(mans, key=lambda m: (m.step, m.created)):
-                snaps.manifests[man.snapshot_id] = man
-                snaps.order.append(man.snapshot_id)
+            snaps.load_existing()
         abstract = jax.eval_shape(
             lambda: api.TrainState(init_tree(specs.params, jax.random.key(0)),
                                    init_tree(specs.opt, jax.random.key(0))))
@@ -183,6 +190,10 @@ def main(argv=None) -> dict:
         "store": dict(store.stats),
         "alive_workers": sum(w.alive for w in trainer.workers.values()),
     }
+    if replicas is not None:
+        replicas.flush()             # durability: drain the outbox on exit
+        summary["replication"] = {**dict(replicas.rstats),
+                                  **replicas.replication_report()}
     if server is not None:
         log = server.uplinks.get("train")
         hist = trainer.history

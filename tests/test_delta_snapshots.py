@@ -191,6 +191,54 @@ def test_trainer_restore_latest_through_delta_chain():
 
 
 # ---------------------------------------------------------------------------
+# resume scan: highest (step, created) wins even when v1 + v2 manifests
+# coexist in one directory and filename order lies (PR 1 fix, now shared
+# by launch/train.py --resume through SnapshotManager.load_existing)
+# ---------------------------------------------------------------------------
+def test_load_existing_picks_highest_step_across_v1_v2(tmp_path):
+    store = ChunkStore(tmp_path / "store", chunk_bytes=1 << 12)
+    root = tmp_path / "snaps"
+    (root / "manifests").mkdir(parents=True)
+    old = np.arange(2000, dtype=np.float32)
+    new = old + 1.0
+    v2_refs = store.put_buffer(memoryview(old).cast("B"))
+    v1_refs = store.put_buffer(memoryview(new).cast("B"))
+    # v2 manifest at step 2 whose snapshot id sorts LAST by filename
+    v2 = json.dumps({
+        "version": 2, "snapshot_id": "snap-000009-ffffffff", "parent": None,
+        "step": 2, "created": 50.0, "kind": "base",
+        "aux": {"cursor": {"next_index": 3}, "round": 2},
+        "tensors": {"['x']": {"shape": [2000], "dtype": "float32",
+                              "refs": v2_refs}}})
+    # v1 manifest (pre-delta process) at step 5: older id, NEWER step
+    v1 = json.dumps({
+        "snapshot_id": "snap-000001-aaaaaaaa", "parent": None,
+        "step": 5, "created": 99.0,
+        "aux": {"cursor": {"next_index": 6}, "round": 5},
+        "tensors": {"['x']": {"shape": [2000], "dtype": "float32",
+                              "hashes": v1_refs}}})
+    (root / "manifests" / "snap-000009-ffffffff.json").write_text(v2)
+    (root / "manifests" / "snap-000001-aaaaaaaa.json").write_text(v1)
+
+    mgr = SnapshotManager(store, root=root, keep_last=10)
+    assert mgr.load_existing() == 2
+    assert mgr.latest() == "snap-000001-aaaaaaaa"   # step order, not name
+    assert mgr.load_existing() == 0                 # idempotent re-scan
+
+    tr = VolunteerTrainer(grad_fn=None, apply_fn=None, state=None,
+                          stream=None, micro_batches=1, snapshots=mgr)
+    next_step = tr.restore_latest({"x": np.zeros_like(new)})
+    assert next_step == 6
+    assert np.array_equal(_bits(tr.state["x"]), _bits(new))
+    assert tr.cursor.next_index == 6
+    # a snapshot taken after adoption must not collide with adopted ids
+    info = mgr.snapshot({"x": new + 1.0}, step=6)
+    assert info.snapshot_id not in ("snap-000001-aaaaaaaa",
+                                    "snap-000009-ffffffff")
+    assert mgr.latest() == info.snapshot_id
+
+
+# ---------------------------------------------------------------------------
 # server-side block sync for a re-attaching volunteer
 # ---------------------------------------------------------------------------
 def test_server_reattach_moves_only_deltas():

@@ -1,0 +1,417 @@
+"""Fault-injection tests for replicated snapshot chains (ReplicaSet +
+ChurnSim).
+
+The acceptance cycle, under three distinct seeds: run volunteer training
+with per-round snapshots fanning out to peer stores through the bounded
+outbox (with scripted message drops and reordered delivery), kill the
+primary store with full disk loss after snapshot k, promote a replica,
+and prove that ``restore_latest`` + one more training round on the
+promoted store reproduces byte-identical state with zero lost committed
+snapshots — while the simulator's step accounting shows replication never
+did peer I/O on the snapshot hot path.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.chunkstore import ChunkStore, is_delta_ref
+from repro.core.elastic import SimWorker, VolunteerTrainer
+from repro.core.replica import ReplicaSet
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.server import Project, VBoincServer
+from repro.core.sim import ChurnSim
+from repro.core.snapshots import SnapshotManager
+from repro.models import api
+
+N = 8192                       # 32 KiB of f32 params -> 8 chunks of 4 KiB
+CHUNK = 1 << 12
+
+
+# ---------------------------------------------------------------------------
+# toy deterministic training job (cheap; bitwise-reproducible rounds)
+# ---------------------------------------------------------------------------
+class ToyStream:
+    def batch(self, index: int) -> dict:
+        rng = np.random.default_rng(1000 + index)
+        return {"x": rng.standard_normal(N).astype(np.float32)}
+
+
+def _toy_grad(params, batch):
+    diff = params["w"] - batch["x"]
+    return float(np.mean(diff * diff)), {"w": (2.0 / N) * diff}
+
+
+def _toy_apply(state, grads):
+    m = (0.9 * state.opt["m"] + grads["w"]).astype(np.float32)
+    w = (state.params["w"] - 0.1 * m).astype(np.float32)
+    return api.TrainState({"w": w}, {"m": m})
+
+
+def _toy_state():
+    rng = np.random.default_rng(42)
+    return api.TrainState({"w": rng.standard_normal(N).astype(np.float32)},
+                          {"m": np.zeros(N, np.float32)})
+
+
+def _abstract():
+    return api.TrainState({"w": np.zeros(N, np.float32)},
+                          {"m": np.zeros(N, np.float32)})
+
+
+def _toy_trainer(snaps, seed=0):
+    tr = VolunteerTrainer(grad_fn=_toy_grad, apply_fn=_toy_apply,
+                          state=_toy_state(), stream=ToyStream(),
+                          micro_batches=2, snapshots=snaps,
+                          snapshot_every=1, seed=seed,
+                          scheduler=VolunteerScheduler(clock=SimClock()))
+    tr.add_worker(SimWorker("w0"))
+    return tr
+
+
+def _state_bytes(state) -> bytes:
+    return np.concatenate(
+        [np.asarray(leaf).reshape(-1).view(np.uint8)
+         for leaf in jax.tree.leaves(state)]).tobytes()
+
+
+def _golden(rounds: int) -> list[bytes]:
+    """Reference run, no replication, no churn: state bytes per round."""
+    tr = _toy_trainer(SnapshotManager(ChunkStore(chunk_bytes=CHUNK),
+                                      keep_last=10))
+    out = []
+    for s in range(rounds):
+        tr.round(s)
+        out.append(_state_bytes(tr.state))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# acceptance: kill-primary -> promote -> restore -> resume, 3 seeds
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_kill_primary_promote_restore_resume(seed):
+    k = 3                                        # kill after snapshot k
+    golden = _golden(k + 2)
+
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:], outbox_limit=256)
+    sim = ChurnSim(rs, seed=seed)
+    snaps = SnapshotManager(rs, keep_last=10)
+    tr = _toy_trainer(snaps, seed=seed)
+
+    for s in range(k + 1):                       # rounds 0..k, snapshot each
+        sim.hot(lambda s=s: tr.round(s))
+        if s == 1:
+            sim.drop(1)                          # scripted message loss
+        sim.pump()
+        sim.deliver(shuffle=True)                # reordered delivery
+    sim.settle()                                 # retries drain the drop
+    assert not rs.outbox and not sim.in_flight
+
+    committed = list(snaps.order)
+    assert len(committed) == k + 1
+    live = set(snaps.get_manifest(snaps.latest()).all_refs())
+    for r in rs.live_closure_all(live):
+        assert rs.replication_factor(r) == 3     # fully fanned out
+
+    sim.kill(0, wipe=True)                       # primary disk loss
+    promoted = sim.promote()
+    assert promoted != 0
+
+    # zero lost committed snapshots: every retained manifest still restores
+    for sid in committed:
+        state, _ = snaps.restore(sid, target_tree=_abstract())
+        assert _state_bytes(state)               # resolvable, hash-verified
+
+    tr2 = _toy_trainer(snaps, seed=seed + 100)
+    next_step = tr2.restore_latest(_abstract())
+    assert next_step == k + 1
+    assert _state_bytes(tr2.state) == golden[k]  # byte-identical restore
+
+    # one more round against the promoted store reproduces the reference
+    sim.hot(lambda: tr2.round(next_step))
+    sim.pump()
+    sim.deliver(shuffle=False)
+    assert _state_bytes(tr2.state) == golden[k + 1]
+
+    # replication never did peer I/O inside a hot step (step accounting)
+    assert sim.peer_ingests_during_hot_steps() == []
+    # ...but peers did real ingest work during net steps
+    assert any(e[1] == "net" and e[2] != e[3] for e in sim.ingest_log)
+
+
+# ---------------------------------------------------------------------------
+# read repair: torn/missing primary objects heal from a peer in place
+# ---------------------------------------------------------------------------
+def test_read_repair_heals_torn_chain(tmp_path):
+    primary = ChunkStore(tmp_path / "p0", chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer])
+
+    base = np.zeros(CHUNK, np.uint8)
+    base[:16] = 7
+    h = rs.put(base.tobytes())
+    new = base.copy()
+    new[100] = 9
+    dref = rs.put_delta(h, (base ^ new).tobytes(), full_bytes=new.tobytes())
+    assert is_delta_ref(dref)
+    rs.flush()
+    assert rs.replication_factor(h) == 2 and rs.replication_factor(dref) == 2
+
+    # tear the primary's base object mid-file (simulated partial write)
+    p = tmp_path / "p0" / "objects" / h[:2] / h[2:]
+    p.write_bytes(p.read_bytes()[:100])
+    assert rs.resolve(dref) == new.tobytes()     # healed from the peer
+    assert rs.rstats["repaired"] >= 1
+    assert primary.get(h) == base.tobytes()      # healed IN PLACE, verified
+
+    # a deleted delta record heals too (chain depth re-validated by ingest)
+    dh = dref[2:]
+    (tmp_path / "p0" / "deltas" / dh[:2] / dh[2:]).unlink()
+    primary._depths.clear()
+    assert rs.resolve(dref) == new.tobytes()
+    assert primary.ref_depth(dref) == 1
+
+
+def test_read_repair_without_any_replica_raises():
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [])
+    h = rs.put(b"x" * 100)
+    primary.wipe()
+    with pytest.raises(IOError):
+        rs.resolve(h)
+    assert rs.rstats["repair_failed"] == 1
+
+
+# ---------------------------------------------------------------------------
+# GC marks the closure across the whole set
+# ---------------------------------------------------------------------------
+def test_gc_keeps_peer_parent_alive_for_primary_only_delta():
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer])
+
+    base = np.zeros(CHUNK, np.uint8)
+    base[:32] = 5
+    h = rs.put(base.tobytes())
+    rs.flush()                                   # parent lives on both
+    new = base.copy()
+    new[64] = 6
+    dref = rs.put_delta(h, (base ^ new).tobytes(), full_bytes=new.tobytes())
+    assert is_delta_ref(dref) and not peer.has(dref)   # not pumped yet
+    garbage = peer.put(b"Z" * 64)                # peer-local junk
+
+    rs.gc({dref})
+    # the delta record exists only on the primary, yet the peer keeps the
+    # parent the primary still references; the peer sweep is deferred to
+    # the next pump (no peer I/O inside the synchronous gc call)
+    assert peer.has(h) and peer.has(garbage)
+    assert primary.has(h) and primary.has(dref)
+
+    rs.flush()                                   # outbox survived the gc;
+    assert peer.has(dref)                        # deferred sweep applied
+    assert peer.has(h) and not peer.has(garbage)
+    assert rs.replication_factor(dref) == 2
+
+
+# ---------------------------------------------------------------------------
+# a down member defers its refs: no silent drain of the outbox
+# ---------------------------------------------------------------------------
+def test_pump_defers_refs_for_down_peer_no_silent_loss():
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer], outbox_limit=32)
+
+    rs.mark_down(1)                              # peer offline
+    h = rs.put(b"precious" * 100)
+    rs.pump()
+    assert rs.rstats["deferred"] >= 1            # parked, NOT drained
+    assert rs.replication_report([h])["parked"] == 1
+    assert not peer.has(h)
+    rs.pump()                                    # no churn while parked
+    assert rs.rstats["deferred"] == 1
+
+    rs.mark_up(1)                                # peer returns
+    assert h in rs.outbox                        # parked refs re-queued
+    rs.pump()
+    assert not rs.outbox                         # now fanned out
+    assert rs.replication_factor(h) == 2
+    assert rs.replication_report([h])["parked"] == 0
+
+
+def test_sync_delivery_survives_deferred_gc_sweep():
+    """A keep set recorded by gc must not revert objects that sync (or a
+    delayed transport) delivered to a peer after the gc ran."""
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer], outbox_limit=1)
+    a = rs.put(b"a" * 64)
+    rs.flush()
+    rs.gc({a})                                   # peer sweep deferred
+    b = rs.put(b"b" * 64)                        # b overflows the outbox
+    c = rs.put(b"c" * 64)
+    assert rs.rstats["outbox_dropped"] >= 1
+    rs.sync()                                    # repairs b (and c)
+    assert peer.has(b) and peer.has(c)
+    rs.pump()                                    # stale keep={a} must not
+    assert peer.has(b) and peer.has(c)           # undo the repair
+    assert rs.replication_factor(b) == 2
+
+
+def test_park_dedups_refs_under_flaky_alive_peer():
+    """A ref retried because an alive peer's sends keep failing must be
+    parked once per down member, not once per retry."""
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:],
+                    transport=lambda i, recs: False)   # alive sends fail
+    rs.mark_down(2)
+    refs = [rs.put(bytes([65 + i]) * 64) for i in range(3)]
+    for _ in range(5):
+        rs.pump()                                # refs keep retrying
+    parked = list(rs._parked[2])
+    assert sorted(parked) == sorted(refs)        # each owed exactly once
+    assert rs.rstats["deferred"] == 3
+
+
+def test_remove_dead_member_and_promote_bounds():
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:])
+    h = rs.put(b"data" * 64)
+    rs.flush()
+
+    with pytest.raises(IndexError):
+        rs.promote(7)                            # out of range: no damage
+    assert rs.primary_index == 0
+    with pytest.raises(ValueError):
+        rs.remove(0)                             # primary is protected
+
+    rs.mark_down(1)
+    rs.put(b"more" * 64)
+    rs.pump()                                    # parks a ref for member 1
+    rs.remove(1)                                 # volunteer never returns
+    assert len(rs.members) == 2 and rs.primary_index == 0
+    assert rs._parked == {}                      # its parked queue is gone
+    rs.flush()
+    assert rs.replication_factor(h) == 2         # survivor set still works
+
+    # failover to a bogus index must not brick a healthy primary
+    server = VBoincServer(rs)
+    with pytest.raises(IndexError):
+        server.failover(index=9)
+    assert rs.primary_index == 0
+    assert rs.resolve(h)                         # primary still serving
+
+
+# ---------------------------------------------------------------------------
+# bounded outbox: a dead peer never blocks or grows the hot path
+# ---------------------------------------------------------------------------
+def test_bounded_outbox_never_blocks_and_sync_repairs():
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer], outbox_limit=8,
+                    transport=lambda i, recs: False)   # peer unreachable
+
+    refs = [rs.put(np.random.default_rng(i).bytes(256)) for i in range(20)]
+    assert len(rs.outbox) <= 8                   # bounded under outage
+    assert rs.rstats["outbox_dropped"] >= 12
+    rs.pump()                                    # all sends fail, no raise
+    assert rs.rstats["send_failed"] > 0
+    assert len(rs.outbox) <= 8
+    assert not list(peer.all_refs())
+
+    rs.transport = None                          # link restored
+    rs.sync()                                    # anti-entropy closes gaps
+    for r in refs:
+        assert rs.replication_factor(r) == 2
+
+
+# ---------------------------------------------------------------------------
+# server failover: promoted replica serves fetch_capsule / report_result
+# ---------------------------------------------------------------------------
+def test_server_failover_serves_fetch_and_results():
+    from repro.core.capsule import CapsuleSpec
+    from repro.models.lm import RunConfig
+
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:])
+    server = VBoincServer(rs)
+    mgr = SnapshotManager(rs, keep_last=5, auto_gc=False)
+    x = np.random.default_rng(5).standard_normal(N).astype(np.float32)
+    mgr.snapshot({"params": x}, step=0)
+
+    spec = CapsuleSpec("qwen2-1.5b", "train_4k", RunConfig())
+    proj = Project("lm", spec, scheduler=VolunteerScheduler(clock=SimClock()))
+    proj.snapshots = mgr
+    server.publish(proj)
+    key = server.register_user("vol")
+    rs.flush()
+
+    stores[0].wipe()                             # primary disk dies
+    promoted = server.failover()
+    assert promoted != 0 and rs.primary_index == promoted
+
+    _, missing, moved = server.fetch_capsule("lm", set(), key)
+    assert missing and moved > x.nbytes // 2     # still serving, full state
+    refs = mgr.get_manifest(mgr.latest()).tensors["['params']"].refs
+    got = np.frombuffer(rs.resolve_buffer(refs), np.float32)
+    assert np.array_equal(got.view(np.uint8), x.view(np.uint8))
+
+    proj.scheduler.join("w")
+    proj.scheduler.submit(0, {})
+    unit = server.request_work("lm", "w")
+    assert unit is not None
+    assert server.report_result("lm", "w", 0, "h")   # results keep flowing
+
+    with pytest.raises(RuntimeError):
+        VBoincServer(ChunkStore()).failover()    # unreplicated store
+
+
+# ---------------------------------------------------------------------------
+# production mode: the background pump drains the outbox on its own
+# ---------------------------------------------------------------------------
+def test_background_pump_thread_replicates():
+    primary = ChunkStore(chunk_bytes=CHUNK)
+    peer = ChunkStore(chunk_bytes=CHUNK)
+    rs = ReplicaSet(primary, [peer])
+    rs.start(interval_s=0.001)
+    try:
+        refs = [rs.put(np.random.default_rng(i).bytes(512))
+                for i in range(10)]
+    finally:
+        rs.stop()                                # joins, then final flush
+    assert rs._thread is None
+    for r in refs:
+        assert rs.replication_factor(r) == 2
+    rs.stop()                                    # idempotent
+    report = rs.replication_report(refs)
+    assert report["min_factor"] == 2 and report["fully_replicated"] == 10
+    assert report["outbox"] == 0
+
+
+# ---------------------------------------------------------------------------
+# revive + anti-entropy: a wiped member catches back up
+# ---------------------------------------------------------------------------
+def test_revived_member_catches_up_via_sync():
+    stores = [ChunkStore(chunk_bytes=CHUNK) for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:])
+    sim = ChurnSim(rs, seed=7)
+    snaps = SnapshotManager(rs, keep_last=10)
+    tr = _toy_trainer(snaps)
+
+    sim.hot(lambda: tr.round(0))
+    sim.settle()
+    sim.kill(2, wipe=True)                       # peer 2 loses its disk
+    sim.hot(lambda: tr.round(1))                 # writes continue
+    sim.settle()
+    live = set(snaps.get_manifest(snaps.latest()).all_refs())
+    closure = rs.live_closure_all(live)
+    assert all(rs.replication_factor(r) == 2 for r in closure)
+
+    sim.revive(2, sync=True)                     # anti-entropy catch-up
+    assert all(rs.replication_factor(r) == 3 for r in closure)
+    # the revived member alone can reconstruct the snapshot
+    man = snaps.get_manifest(snaps.latest())
+    key = next(k for k in man.tensors if "params" in k)
+    rs2 = ReplicaSet(stores[2])
+    data = rs2.resolve_buffer(man.tensors[key].refs)
+    assert data == np.asarray(tr.state.params["w"]).tobytes()

@@ -1,0 +1,224 @@
+"""Crash-consistency and GC edge-case tests for the ChunkStore.
+
+Torn writes must be *detected* (hash mismatch on read), never served as
+garbage; an interrupted atomic publish must leave no visible object; and
+``live_closure``/``gc`` must hold up at the chain-depth boundary and when
+a GC races an ``ingest`` whose chain references a to-be-collected parent
+(the PR 4 rebase-vs-GC family).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import repro.core.chunkstore as chunkstore_mod
+from repro.core.chunkstore import (ChunkStore, DeltaRecord, is_delta_ref,
+                                   sha256)
+
+CHUNK = 1 << 12
+
+
+def _sparse_xor(n=CHUNK, where=100, val=9):
+    xor = np.zeros(n, np.uint8)
+    xor[where] = val
+    return xor
+
+
+# ---------------------------------------------------------------------------
+# torn objects are detected, not served
+# ---------------------------------------------------------------------------
+def test_torn_raw_object_detected(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=CHUNK)
+    data = bytes(range(256)) * 16
+    h = store.put(data)
+    p = tmp_path / "objects" / h[:2] / h[2:]
+    p.write_bytes(p.read_bytes()[: len(data) // 2])   # torn mid-write
+    with pytest.raises(IOError, match="integrity"):
+        store.get(h)
+    with pytest.raises(IOError, match="integrity"):
+        store.resolve(h)
+
+
+def test_torn_delta_record_detected(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=CHUNK)
+    base = np.arange(CHUNK, dtype=np.uint8)
+    h = store.put(base.tobytes())
+    new = base.copy()
+    new[7] ^= 0xFF
+    dref = store.put_delta(h, (base ^ new).tobytes(),
+                           full_bytes=new.tobytes())
+    assert is_delta_ref(dref)
+    dh = dref[2:]
+    p = tmp_path / "deltas" / dh[:2] / dh[2:]
+    p.write_bytes(p.read_bytes()[:-7])                # truncated record
+    store._depths.clear()
+    with pytest.raises(IOError, match="integrity"):
+        store.resolve(dref)
+
+
+def test_crashed_put_leaves_no_visible_object(tmp_path):
+    """os.replace dying mid-publish must leave the ref invisible (only a
+    *.tmp orphan), and a retry must succeed."""
+    store = ChunkStore(tmp_path, chunk_bytes=CHUNK)
+    data = b"payload" * 100
+    h = sha256(data)
+
+    real = os.replace
+
+    def boom(src, dst):
+        raise RuntimeError("power loss")
+
+    chunkstore_mod.os.replace = boom
+    try:
+        with pytest.raises(RuntimeError):
+            store.put(data)
+    finally:
+        chunkstore_mod.os.replace = real
+    assert not store.has(h)
+    assert h not in store.all_refs()                  # tmp orphan filtered
+    orphans = list(tmp_path.glob("objects/*/*.tmp"))
+    assert orphans                                    # the crash artifact
+    assert store.put(data) == h                       # retry lands cleanly
+    assert store.get(h) == data
+
+
+def test_tmp_orphan_not_listed_as_object(tmp_path):
+    store = ChunkStore(tmp_path, chunk_bytes=CHUNK)
+    h = store.put(b"real object")
+    fake = tmp_path / "objects" / "ab" / f"cdef.{os.getpid()}.tmp"
+    fake.parent.mkdir(parents=True, exist_ok=True)
+    fake.write_bytes(b"half-written")
+    dfake = tmp_path / "deltas" / "cd" / f"ef01.{os.getpid()}.tmp"
+    dfake.parent.mkdir(parents=True, exist_ok=True)
+    dfake.write_bytes(b"half-written")
+    refs = set(store.all_refs())
+    assert refs == {h}
+    assert store.gc({h}) == 0                         # sweep ignores orphans
+
+
+def test_gc_sweeps_aged_tmp_orphans(tmp_path):
+    """Stale *.tmp orphans are reclaimed by gc; a fresh temp file (a
+    concurrent writer mid-publish) is left alone."""
+    store = ChunkStore(tmp_path, chunk_bytes=CHUNK)
+    h = store.put(b"kept object")
+    stale = tmp_path / "objects" / "ab" / "cdef.999.tmp"
+    stale.parent.mkdir(parents=True, exist_ok=True)
+    stale.write_bytes(b"orphan")
+    os.utime(stale, (0, 0))                           # crashed long ago
+    fresh = tmp_path / "deltas" / "cd" / f"ef.{os.getpid()}.tmp"
+    fresh.parent.mkdir(parents=True, exist_ok=True)
+    fresh.write_bytes(b"in flight")                   # mtime = now
+    assert store.gc({h}) == 0
+    assert not stale.exists()                         # reclaimed
+    assert fresh.exists()                             # writer undisturbed
+    assert store.get(h) == b"kept object"
+
+
+# ---------------------------------------------------------------------------
+# closure/GC at the max_chain boundary
+# ---------------------------------------------------------------------------
+def test_live_closure_parent_at_exactly_max_chain_depth():
+    store = ChunkStore(chunk_bytes=CHUNK, max_chain=3)
+    state = np.zeros(CHUNK, np.uint8)
+    refs = [store.put(state.tobytes())]
+    for i in range(1, 4):                             # depths 1..3
+        new = state.copy()
+        new[i] = i
+        refs.append(store.put_delta(refs[-1], (state ^ new).tobytes(),
+                                    full_bytes=new.tobytes()))
+        state = new
+    tip = refs[-1]
+    assert store.ref_depth(tip) == 3                  # exactly max_chain
+    # one deeper would exceed the cap -> rebase to a raw object
+    deeper = state.copy()
+    deeper[9] = 9
+    rebased = store.put_delta(tip, (state ^ deeper).tobytes(),
+                              full_bytes=deeper.tobytes())
+    assert not is_delta_ref(rebased) and store.stats["rebased"] == 1
+
+    closure = store.live_closure([tip])
+    assert closure == set(refs)                       # whole chain pinned
+    removed = store.gc({tip})
+    assert removed == 1                               # only the rebase dies
+    assert all(store.has(r) for r in refs)
+    assert store.resolve(tip) == state.tobytes()      # still reconstructs
+
+
+def test_gc_racing_ingest_of_chain_on_collected_parent():
+    """GC firing between ingest's chain validation and its writes (the
+    rebase-vs-GC interleaving): the batch's own raw parent must land
+    before the sweep can orphan the delta — the chain stays resolvable."""
+    server = ChunkStore(chunk_bytes=CHUNK)
+    client = ChunkStore(chunk_bytes=CHUNK)
+    base = np.full(CHUNK, 3, np.uint8)
+    new = base.copy()
+    new[50] = 4
+    ph = client.put(base.tobytes())
+    dref = client.put_delta(ph, (base ^ new).tobytes(),
+                            full_bytes=new.tobytes())
+    records = client.export_records([ph, dref])       # whole chain uplinks
+
+    real_write = server._write_delta
+    fired = {"n": 0}
+
+    def racing_write(h, rec, depth):
+        if not fired["n"]:
+            fired["n"] += 1
+            server.gc(live=set())                     # sweeps mid-ingest
+        return real_write(h, rec, depth)
+
+    server._write_delta = racing_write
+    try:
+        server.ingest(records)
+    finally:
+        server._write_delta = real_write
+    # raws are applied before deltas, so the mid-ingest GC collected the
+    # just-written parent; the delta must not be left dangling silently
+    if server.has(dref):
+        try:
+            got = server.resolve(dref)
+            assert got == new.tobytes()               # healed/resolvable
+        except (IOError, KeyError, FileNotFoundError):
+            pass                                      # detected, not garbage
+    # a follow-up ingest of the same chain must repair the store fully
+    server.ingest(client.export_records([ph, dref]))
+    assert server.resolve(dref) == new.tobytes()
+
+
+def test_gc_concurrent_chain_reference_keeps_parent():
+    """GC interleaved mid-ingest with a live view that still references
+    the parent (an older manifest): the parent must survive the sweep and
+    the just-ingested delta must resolve — GC never eats a live parent."""
+    server = ChunkStore(chunk_bytes=CHUNK)
+    base = np.full(CHUNK, 1, np.uint8)
+    ph = server.put(base.tobytes())                   # live via manifest k-1
+    stale = server.put(b"old snapshot junk")          # not referenced
+    client = ChunkStore(chunk_bytes=CHUNK)
+    client.put(base.tobytes())
+    new = base.copy()
+    new[3] = 2
+    dref = client.put_delta(ph, (base ^ new).tobytes(),
+                            full_bytes=new.tobytes())
+
+    real_write = server._write_delta
+
+    def racing_write(h, rec, depth):
+        server.gc(live={ph})                          # trim fires mid-ingest
+        return real_write(h, rec, depth)
+
+    server._write_delta = racing_write
+    try:
+        server.ingest(client.export_records([dref]))
+    finally:
+        server._write_delta = real_write
+    assert server.has(ph) and not server.has(stale)   # parent survived
+    assert server.resolve(dref) == new.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# DeltaRecord corruption surface
+# ---------------------------------------------------------------------------
+def test_delta_unpack_rejects_bad_magic():
+    rec = DeltaRecord("ab" * 32, 1, 16, b"\x00" * 4, False).pack()
+    with pytest.raises(IOError, match="not a delta record"):
+        DeltaRecord.unpack(b"XXXX" + rec[4:])

@@ -1,0 +1,88 @@
+"""Property-based round-trip tests (hypothesis) for the chunk-store wire
+formats: zero-run RLE payloads and packed ``DeltaRecord``s — including
+empty payloads, all-zero pages, and payloads with no zero runs at all.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chunkstore import (DeltaRecord, rle_zero_decode,
+                                   rle_zero_encode)
+
+SETTINGS = dict(max_examples=60, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# zero-run RLE
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(data=st.binary(max_size=4096))
+def test_rle_roundtrip_arbitrary(data):
+    assert rle_zero_decode(rle_zero_encode(data), len(data)) == data
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(0, 1 << 14))
+def test_rle_all_zero_page(n):
+    data = bytes(n)
+    enc = rle_zero_encode(data)
+    assert rle_zero_decode(enc, n) == data
+    # one zero-run token; short runs fold into a literal; empty stays empty
+    assert len(enc) == (0 if n == 0 else 5 if n >= 8 else n + 5)
+
+
+@settings(**SETTINGS)
+@given(vals=st.lists(st.integers(1, 255), min_size=1, max_size=2048))
+def test_rle_no_zero_runs_bails_to_literal(vals):
+    data = bytes(vals)
+    enc = rle_zero_encode(data)
+    assert len(enc) == len(data) + 5          # single literal token, O(1)
+    assert rle_zero_decode(enc, len(data)) == data
+
+
+@settings(**SETTINGS)
+@given(runs=st.lists(st.tuples(st.booleans(), st.integers(1, 300)),
+                     max_size=24),
+       seed=st.integers(0, 2 ** 31))
+def test_rle_roundtrip_structured_runs(runs, seed):
+    """Alternating zero / nonzero runs of arbitrary lengths — the XOR
+    payload shape RLE exists for."""
+    rng = np.random.default_rng(seed)
+    parts = [np.zeros(n, np.uint8) if zero
+             else rng.integers(1, 256, n, dtype=np.uint8).astype(np.uint8)
+             for zero, n in runs]
+    data = (np.concatenate(parts) if parts
+            else np.zeros(0, np.uint8)).tobytes()
+    assert rle_zero_decode(rle_zero_encode(data), len(data)) == data
+
+
+# ---------------------------------------------------------------------------
+# DeltaRecord pack/unpack
+# ---------------------------------------------------------------------------
+_hex = st.text(alphabet="0123456789abcdef", min_size=0, max_size=64)
+_parents = st.one_of(_hex, _hex.map(lambda s: "d:" + s))
+
+
+@settings(**SETTINGS)
+@given(parent=_parents, depth=st.integers(0, 0xFFFF),
+       raw_len=st.integers(0, 0xFFFFFFFF),
+       payload=st.binary(max_size=2048), compressed=st.booleans())
+def test_delta_record_pack_unpack_roundtrip(parent, depth, raw_len,
+                                            payload, compressed):
+    rec = DeltaRecord(parent, depth, raw_len, payload, compressed)
+    out = DeltaRecord.unpack(rec.pack())
+    assert out == rec                         # all five fields survive
+
+
+@settings(**SETTINGS)
+@given(data=st.binary(max_size=4096))
+def test_delta_record_xor_through_rle(data):
+    """A packed record reproduces its XOR image whichever encoding the
+    writer chose (including the empty payload)."""
+    comp = DeltaRecord("ff" * 32, 1, len(data), rle_zero_encode(data), True)
+    assert DeltaRecord.unpack(comp.pack()).xor() == data
+    raw = DeltaRecord("ff" * 32, 1, len(data), data, False)
+    assert DeltaRecord.unpack(raw.pack()).xor() == data
