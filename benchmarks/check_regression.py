@@ -1,0 +1,80 @@
+"""Perf-trajectory gate for the snapshot stall benchmark.
+
+Compares a fresh ``table2_snapshots --json`` run against the committed
+baseline (``benchmarks/BENCH_table2.json``) and fails when the trainer's
+per-round ``stall_ms`` regresses by more than ``--tolerance`` (default
+25%).  A small absolute floor (``--floor-ms``) keeps shared-runner noise
+from failing rows whose stall is near zero — a 1 ms → 1.4 ms wobble is
+jitter, a 10 ms → 14 ms jump is a regression.
+
+Only the write-heavy rows gate by default: ``cpu``/``primes`` snapshot an
+unchanged state, so their stall is pure probe overhead at microsecond
+scale and 25% of it is below timer noise.
+
+    PYTHONPATH=src:. python -m benchmarks.table2_snapshots \
+        --tiny --rounds 3 --json /tmp/now.json
+    PYTHONPATH=src:. python -m benchmarks.check_regression /tmp/now.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+BASELINE = Path(__file__).parent / "BENCH_table2.json"
+
+# rows where the stall is real work being hidden (the zero-stall claim);
+# frozen workloads stall for ~nothing in both modes and only add noise
+GATED_ROWS = ("memory", "io", "disk", "sprint")
+
+
+def check(current: dict, baseline: dict, tolerance: float,
+          floor_ms: float, rows=GATED_ROWS) -> list[str]:
+    """-> list of human-readable failures (empty = pass)."""
+    cur = {r["name"]: r for r in current["rows"]}
+    base = {r["name"]: r for r in baseline["rows"]}
+    failures = []
+    for name in rows:
+        if name not in base:
+            continue                  # baseline predates this workload
+        if name not in cur:
+            failures.append(f"{name}: row missing from current run")
+            continue
+        b = float(base[name]["stall_ms"])
+        c = float(cur[name]["stall_ms"])
+        limit = b * (1.0 + tolerance) + floor_ms
+        verdict = "FAIL" if c > limit else "ok"
+        print(f"  {name:8s} stall_ms {b:8.3f} -> {c:8.3f}  "
+              f"(limit {limit:.3f})  {verdict}")
+        if c > limit:
+            failures.append(f"{name}: stall_ms {c:.3f} > limit {limit:.3f} "
+                            f"(baseline {b:.3f} +{tolerance:.0%} "
+                            f"+{floor_ms}ms)")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="JSON from table2_snapshots --json")
+    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed relative stall_ms growth (0.25 = +25%%)")
+    ap.add_argument("--floor-ms", type=float, default=2.0,
+                    help="absolute slack added to every limit (timer noise)")
+    args = ap.parse_args(argv)
+    current = json.loads(Path(args.current).read_text())
+    baseline = json.loads(Path(args.baseline).read_text())
+    print(f"stall regression gate (tolerance +{args.tolerance:.0%}, "
+          f"floor {args.floor_ms}ms):")
+    failures = check(current, baseline, args.tolerance, args.floor_ms)
+    if failures:
+        print("\n".join(f"REGRESSION: {f}" for f in failures),
+              file=sys.stderr)
+        return 1
+    print("stall within budget on all gated rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,75 @@
 """Roofline table generator: reads the dry-run JSONs (§Dry-run) and emits
 the per-(arch × shape × mesh) three-term table for EXPERIMENTS.md §Roofline.
+
+Also measures the snapshot probe kernel itself (``roofline.snapshot.*``):
+launches-per-snapshot for the size-bucketed whole-tree diff versus the
+per-leaf path — the bucketed count must be O(size buckets), not O(leaves)
+— and the probe's streaming bandwidth (it reads old + new once, so it
+should sit near memory bandwidth, the roofline's memory term).
 """
 from __future__ import annotations
 
 import json
+import time
 from pathlib import Path
+
+import numpy as np
 
 from benchmarks.common import csv_line
 
 DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def snapshot_kernel_stats(leaves: int = 64, repeats: int = 5,
+                          mode: str = "ref") -> dict:
+    """Probe a synthetic optimizer-like tree (many small leaves, a few
+    size classes) through the DeviceMirror, bucketed vs per-leaf.
+
+    -> {leaves, buckets, launches_bucketed, launches_per_leaf,
+        probe_gbps, d2h_frac} — launch counts for ONE whole-tree
+    snapshot, read from KERNEL_STATS."""
+    from repro.kernels.delta_encode.ops import (DeviceMirror, probe_leaves,
+                                                reset_kernel_stats,
+                                                KERNEL_STATS)
+    rng = np.random.default_rng(7)
+    sizes = [2048, 8192, 33000, 131072]          # ~4 pow2 tile classes
+    news = {f"leaf{i:03d}": rng.standard_normal(sizes[i % len(sizes)])
+            .astype(np.float32) for i in range(leaves)}
+
+    def mutated(tree, r):
+        out = {}
+        for j, (k, v) in enumerate(tree.items()):
+            if j % 2 == r % 2:                   # touch half the leaves
+                w = v.copy()
+                w[::97] += 1.0
+                out[k] = w
+            else:
+                out[k] = v.copy()                # new object, same bytes
+        return out
+
+    results = {}
+    for label, bucketed in (("bucketed", True), ("per_leaf", False)):
+        mirror = DeviceMirror()
+        probe_leaves(news, mode=mode, mirror=mirror, bucketed=bucketed)
+        state, dt = news, 0.0
+        reset_kernel_stats()
+        for r in range(repeats):
+            state = mutated(state, r)
+            t0 = time.perf_counter()
+            probe_leaves(state, mode=mode, mirror=mirror, bucketed=bucketed)
+            dt += time.perf_counter() - t0
+        stats = dict(KERNEL_STATS)
+        results[label] = (stats, dt)
+        reset_kernel_stats()
+    b_stats, b_dt = results["bucketed"]
+    l_stats, _ = results["per_leaf"]
+    return {
+        "leaves": leaves,
+        "launches_bucketed": b_stats["launches"] // repeats,
+        "launches_per_leaf": l_stats["launches"] // repeats,
+        "probe_gbps": b_stats["probe_bytes"] / max(b_dt, 1e-9) / 1e9,
+        "d2h_frac": b_stats["d2h_bytes"] / max(1, b_stats["probe_bytes"]),
+    }
 
 
 def load_records(dryrun_dir: Path = DRYRUN_DIR) -> list[dict]:
@@ -36,15 +97,28 @@ def table(recs: list[dict]) -> str:
     return "\n".join(rows)
 
 
+def snapshot_kernel_rows() -> list[str]:
+    s = snapshot_kernel_stats()
+    return [
+        csv_line("roofline.snapshot.launches_per_snapshot",
+                 float(s["launches_bucketed"]),
+                 f"leaves={s['leaves']};bucketed={s['launches_bucketed']};"
+                 f"per_leaf={s['launches_per_leaf']}"),
+        csv_line("roofline.snapshot.probe_gbps", s["probe_gbps"],
+                 f"d2h_frac={s['d2h_frac']:.4f}"),
+    ]
+
+
 def run() -> list[str]:
     recs = load_records()
     ok = [r for r in recs if r.get("status") == "ok"]
     skipped = [r for r in recs if r.get("status") == "skipped"]
     err = [r for r in recs if r.get("status") == "error"]
-    lines = [csv_line("roofline.cells_ok", 0.0, f"count={len(ok)}"),
-             csv_line("roofline.cells_skipped", 0.0,
-                      f"count={len(skipped)} (documented)"),
-             csv_line("roofline.cells_error", 0.0, f"count={len(err)}")]
+    lines = snapshot_kernel_rows()
+    lines += [csv_line("roofline.cells_ok", 0.0, f"count={len(ok)}"),
+              csv_line("roofline.cells_skipped", 0.0,
+                       f"count={len(skipped)} (documented)"),
+              csv_line("roofline.cells_error", 0.0, f"count={len(err)}")]
     if ok:
         worst = min(ok, key=lambda r: r["roofline"]["roofline_fraction"])
         best = max(ok, key=lambda r: r["roofline"]["roofline_fraction"])

@@ -161,6 +161,12 @@ class ChunkStore:
         self._mem_delta: Dict[str, bytes] = {}
         self._depths: Dict[str, int] = {}        # delta ref -> chain depth
         self._lock = threading.Lock()
+        # serializes mark+sweep against concurrent writers: a background
+        # SnapshotWriter holds this across "write objects + commit manifest"
+        # so a GC can never collect its live set between the two.  Reentrant
+        # because gc() runs under a caller's guard (DiskSet.gc_all collects
+        # live refs from many managers under the same lock).
+        self.gc_lock = threading.RLock()
         self.stats = {"put_bytes": 0, "dedup_bytes": 0, "get_bytes": 0,
                       "put_chunks": 0, "dedup_chunks": 0,
                       "delta_chunks": 0, "rebased": 0,
@@ -533,13 +539,20 @@ class ChunkStore:
 
     def gc(self, live: set[str]) -> int:
         """Delete all objects not in the closure of ``live``; returns count
-        removed.  (The closure keeps delta parents alive.)"""
-        keep = self.live_closure(live)
-        dead = [r for r in self.all_refs() if r not in keep]
-        for r in dead:
-            self.delete(r)
-        self.sweep_tmp()
-        return len(dead)
+        removed.  (The closure keeps delta parents alive.)
+
+        Mark + sweep run under ``gc_lock``: an async snapshot write holds
+        the same lock across "put objects + register manifest", so the
+        sweep can never observe (and delete) a half-committed snapshot's
+        objects.  Callers that assemble ``live`` from several managers must
+        collect it under the same lock (it is reentrant)."""
+        with self.gc_lock:
+            keep = self.live_closure(live)
+            dead = [r for r in self.all_refs() if r not in keep]
+            for r in dead:
+                self.delete(r)
+            self.sweep_tmp()
+            return len(dead)
 
 
 @dataclass

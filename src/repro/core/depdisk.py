@@ -36,13 +36,18 @@ class DiskInfo:
 class DiskSet:
     """A capsule's attached storage: one base disk + N dependency disks."""
 
-    def __init__(self, store: ChunkStore, root=None, keep_last: int = 3):
+    def __init__(self, store: ChunkStore, root=None, keep_last: int = 3,
+                 async_mode: bool = False, writer_depth: int = 2,
+                 delta_mode: str = "auto"):
         self.store = store
         self._managers: Dict[str, SnapshotManager] = {}
         self._kinds: Dict[str, str] = {}
         self._attached: Dict[str, bool] = {}
         self._root = root
         self._keep_last = keep_last
+        self._async_mode = async_mode
+        self._writer_depth = writer_depth
+        self._delta_mode = delta_mode
 
     # ------------------------------------------------------------------
     def _mgr(self, name: str) -> SnapshotManager:
@@ -52,7 +57,9 @@ class DiskSet:
             # DiskSet-level mark (gc_all) may sweep it.
             self._managers[name] = SnapshotManager(
                 self.store, root=sub, keep_last=self._keep_last,
-                auto_gc=False)
+                auto_gc=False, async_mode=self._async_mode,
+                writer_depth=self._writer_depth,
+                delta_mode=self._delta_mode)
         return self._managers[name]
 
     def create_base(self, params, *, step: int = 0) -> SnapshotInfo:
@@ -79,12 +86,26 @@ class DiskSet:
         self._attached[name] = False
 
     def snapshot_disk(self, name: str, state, *, step: int,
-                      aux: Optional[dict] = None) -> SnapshotInfo:
+                      aux: Optional[dict] = None, block: bool = True):
         if not self._attached.get(name):
             raise KeyError(f"disk {name!r} not attached")
-        info = self._mgr(name).snapshot(state, step=step, aux=aux)
-        self.gc_all()
-        return info
+        res = self._mgr(name).snapshot(state, step=step, aux=aux,
+                                       block=block)
+        if block:
+            self.gc_all()
+        # non-blocking (async writer): sweeping here would stall the caller
+        # on the gc lock the writer holds mid-commit — callers run
+        # wait_all() + gc_all() off the hot path instead
+        return res
+
+    def wait_all(self) -> None:
+        """Drain every disk's pending background writes."""
+        for mgr in self._managers.values():
+            mgr.wait()
+
+    def close_all(self) -> None:
+        for mgr in self._managers.values():
+            mgr.close()
 
     def restore_disk(self, name: str, *, target_tree=None, shardings=None,
                      snapshot_id: Optional[str] = None):
@@ -119,9 +140,17 @@ class DiskSet:
 
     def gc_all(self) -> int:
         """Mark live refs across ALL disks (the store expands the closure
-        over delta parents), sweep the shared store."""
-        live: set[str] = set()
-        for mgr in self._managers.values():
-            for man in mgr.manifests.values():
-                live.update(man.all_refs())
-        return self.store.gc(live)
+        over delta parents), sweep the shared store.
+
+        Live-set collection and the sweep hold the store's ``gc_lock``
+        together: with async writers a sibling disk's snapshot could
+        commit between an unlocked mark and the sweep, and its
+        just-written objects — absent from the stale live set — would be
+        swept.  The lock is reentrant, so ``store.gc`` re-acquiring it
+        inside is fine."""
+        with self.store.gc_lock:
+            live: set[str] = set()
+            for mgr in self._managers.values():
+                for man in mgr.manifests.values():
+                    live.update(man.all_refs())
+            return self.store.gc(live)

@@ -15,6 +15,7 @@ is identical.
 from __future__ import annotations
 
 import hashlib
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -56,6 +57,7 @@ class RoundStats:
     duplicates: int
     invalid: int
     snapshot_bytes: int = 0
+    snapshot_stall_ms: float = 0.0   # trainer-visible snapshot time only
     replicated: int = 0          # replication messages pumped this round
     # delta-aware uplink accounting (0 unless uplink mode is on)
     uplink_dense: int = 0        # int8 payload had volunteers sent it whole
@@ -299,10 +301,19 @@ class VolunteerTrainer:
         )
         if (self.snapshots is not None and self.snapshot_every
                 and (step + 1) % self.snapshot_every == 0):
-            info = self.snapshots.snapshot(
+            import time as _time
+            t0 = _time.perf_counter()
+            # async managers: plan synchronously, persist in the background
+            # — the round pays only the device probe (+ any backpressure)
+            res = self.snapshots.snapshot(
                 self.state, step=step,
-                aux={"cursor": self.cursor.to_state(), "round": step})
-            stats.snapshot_bytes = info.new_bytes
+                aux={"cursor": self.cursor.to_state(), "round": step},
+                block=not getattr(self.snapshots, "is_async", False))
+            stats.snapshot_stall_ms = (_time.perf_counter() - t0) * 1e3
+            info = res if not isinstance(res, Future) \
+                else self.snapshots.last_info
+            if info is not None:
+                stats.snapshot_bytes = info.new_bytes
         if self.replicas is not None:
             # fan this round's writes to the peers off the hot path
             stats.replicated = self.replicas.pump()

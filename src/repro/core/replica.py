@@ -336,34 +336,41 @@ class ReplicaSet:
         n = len(batch) if max_msgs is None else min(len(batch), max_msgs)
         sent, retry = 0, []
         for ref in batch[:n]:
-            if not self.primary.has(ref):
-                self.rstats["missing_at_pump"] += 1
-                continue
-            try:
-                closure = self.primary.live_closure([ref])
-            except (OSError, KeyError):
-                retry.append(ref)            # torn locally; read-repair may
-                continue                     # restore it before next pump
-            failed = False
-            targets: List[tuple[int, List[str]]] = []
-            union: set[str] = set()
-            for i in range(len(self.members)):
-                if i == self.primary_index:
+            # closure + export run under the primary's gc lock: a background
+            # SnapshotWriter's trailing gc (its own thread) must not sweep a
+            # chain between "has(ref)" and "export_records" — exports are
+            # all-or-nothing per ref, deliveries happen outside the lock
+            with self.primary.gc_lock:
+                if not self.primary.has(ref):
+                    self.rstats["missing_at_pump"] += 1
                     continue
-                if i in self._down:
-                    self._park(i, ref)       # owed; re-queued on mark_up
-                    continue
-                needed = sorted(r for r in closure
-                                if not self.members[i].has(r))
-                if needed:
-                    targets.append((i, needed))
-                    union.update(needed)
-            if union:
                 try:
-                    records = self.primary.export_records(sorted(union))
+                    closure = self.primary.live_closure([ref])
                 except (OSError, KeyError):
-                    retry.append(ref)
-                    continue
+                    retry.append(ref)        # torn locally; read-repair may
+                    continue                 # restore it before next pump
+                failed = False
+                targets: List[tuple[int, List[str]]] = []
+                union: set[str] = set()
+                for i in range(len(self.members)):
+                    if i == self.primary_index:
+                        continue
+                    if i in self._down:
+                        self._park(i, ref)   # owed; re-queued on mark_up
+                        continue
+                    needed = sorted(r for r in closure
+                                    if not self.members[i].has(r))
+                    if needed:
+                        targets.append((i, needed))
+                        union.update(needed)
+                records = {}
+                if union:
+                    try:
+                        records = self.primary.export_records(sorted(union))
+                    except (OSError, KeyError):
+                        retry.append(ref)
+                        continue
+            if records:
                 for i, needed in targets:
                     if self._deliver(i, {r: records[r] for r in needed}):
                         self.rstats["sent"] += 1
@@ -464,17 +471,23 @@ class ReplicaSet:
         the primary inline and defer the peer sweeps to the next ``pump``,
         keeping peer I/O off the snapshot hot path (``SnapshotManager``
         auto-gc calls this synchronously after every snapshot).  Returns
-        objects removed from the primary, to match ``ChunkStore.gc``."""
-        keep = self.live_closure_all(live)
-        with self._lock:                     # dead refs need no replication
-            self.outbox = deque(r for r in self.outbox if r in keep)
-            self._parked = {i: deque(r for r in q if r in keep)
-                            for i, q in self._parked.items()}
-        dead = [r for r in self.primary.all_refs() if r not in keep]
-        for r in dead:
-            self.primary.delete(r)
-        self.primary.sweep_tmp()
-        self._gc_keep = keep                 # newest live view wins
+        objects removed from the primary, to match ``ChunkStore.gc``.
+
+        Mark + primary sweep hold the primary's ``gc_lock`` (reentrant, so
+        a SnapshotManager guard around this call nests fine): an async
+        writer mid-commit holds the same lock, so this sweep can never see
+        its objects before their manifest registers."""
+        with self.primary.gc_lock:
+            keep = self.live_closure_all(live)
+            with self._lock:                 # dead refs need no replication
+                self.outbox = deque(r for r in self.outbox if r in keep)
+                self._parked = {i: deque(r for r in q if r in keep)
+                                for i, q in self._parked.items()}
+            dead = [r for r in self.primary.all_refs() if r not in keep]
+            for r in dead:
+                self.primary.delete(r)
+            self.primary.sweep_tmp()
+            self._gc_keep = keep             # newest live view wins
         return len(dead)
 
     def _apply_deferred_gc(self) -> None:

@@ -7,13 +7,28 @@ Mechanics mirror VirtualBox snapshots, but the diff is computed *before*
 anything crosses the device→host boundary:
 
 * ``snapshot()`` — the first snapshot is a full base image.  Every later
-  one is a *differencing image*: the Pallas ``changed_bitmap`` kernel
-  (kernels/delta_encode) XORs the new state against the previous
-  snapshot's host mirror per-tensor and emits one flag per 32 KiB tile;
-  only the changed tiles are gathered and transferred.  Unchanged store
-  chunks re-use the parent manifest's refs with **no hashing at all**, and
-  changed chunks are written as delta objects (``parent_ref + RLE XOR``)
-  — snapshot cost is O(changed blocks), not O(state bytes).
+  one is a *differencing image*: the fused Pallas probe+gather kernel
+  (kernels/delta_encode) XORs the new state against a **device-resident
+  mirror** of the previous snapshot (double-buffered: after each diff the
+  new tiles become the mirror by reference swap, so no H→D re-upload),
+  size-bucketed so the whole pytree diffs in a few concatenated launches.
+  Only the changed tiles cross to host.  Unchanged store chunks re-use the
+  parent manifest's refs with **no hashing at all**, and changed chunks
+  are written as delta objects (``parent_ref + RLE XOR``) — snapshot cost
+  is O(changed blocks), not O(state bytes).
+* **Async writer** (``async_mode=True``) — the calling thread runs ONLY
+  the device probe + changed-tile transfer (``probe_leaves``); chunk
+  compaction, hashing, RLE, ``put_delta`` and deferred ``max_chain``
+  rebase run on a background ``SnapshotWriter`` behind a bounded queue,
+  so the trainer's stall is the probe and nothing else
+  (``SnapshotInfo.stall_ms`` vs ``writer_ms``).  Plans are self-contained
+  (they carry the changed tiles + bitmap, or the full base image); the
+  writer keeps its OWN host image per tensor and advances it serially, so
+  writer and planner share no mutable state.  A half-written snapshot
+  stays invisible: the manifest registers only after every object landed,
+  and a write failure poisons the queue — the next snapshot re-bases from
+  a fresh base image, exactly the ``_mirror.clear()`` invariant of the
+  inline path.
 * **Manifest v2** — each ``TensorEntry`` records per-block refs that are
   either raw hashes or ``"d:"`` delta refs.  v1 manifests (``hashes``)
   remain readable, so old snapshot directories restore unchanged.
@@ -21,10 +36,9 @@ anything crosses the device→host boundary:
   (``ChunkStore.resolve``) and rebuild the pytree; chains are bounded by
   the store's ``max_chain`` (deep chains rebase automatically).
 * ``delete/gc`` — mark the *closure* of live refs from retained
-  snapshots (a delta keeps its parents alive), sweep the rest.
-* async mode — delta planning (device diff + changed-tile transfer)
-  happens synchronously (cheap); store writes run on a background thread
-  so checkpointing overlaps training compute.
+  snapshots (a delta keeps its parents alive), sweep the rest.  The mark
+  and the sweep hold the store's ``gc_lock`` so a concurrent background
+  write can never have a just-written, not-yet-committed object swept.
 
 Restore across meshes: manifests record logical tensors (path, shape,
 dtype); ``restore`` re-shards onto whatever mesh the caller's shardings
@@ -33,9 +47,11 @@ pod (elastic rescale).
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import time
-from concurrent.futures import Future, ThreadPoolExecutor
+from collections import deque
+from concurrent.futures import Future
 from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Any, Dict, List, Optional
@@ -44,7 +60,9 @@ import jax
 import numpy as np
 
 from repro.core.chunkstore import ChunkStore, sha256
-from repro.kernels.delta_encode.ops import changed_blocks
+from repro.core.writer import SnapshotWriter
+from repro.kernels.delta_encode.ops import (DeviceMirror, chunk_records,
+                                            probe_leaves)
 
 MANIFEST_VERSION = 2
 
@@ -119,19 +137,27 @@ class SnapshotInfo:
     total_bytes: int      # logical state size
     changed_chunks: int = 0
     reused_chunks: int = 0
+    stall_ms: float = 0.0     # trainer-visible time (plan [+ write inline])
+    plan_ms: float = 0.0      # device probe + changed-tile transfer
+    writer_ms: float = 0.0    # background chunk/hash/RLE/store/rebase time
 
 
 @dataclass
 class _TensorPlan:
-    """Per-tensor work computed synchronously at snapshot() time."""
+    """Per-tensor work captured synchronously at snapshot() time.
+
+    Self-contained: either the full host image (``base``, re-base path) or
+    the probe's compacted changed tiles + bitmap (delta path).  The writer
+    folds tiles into its OWN host image (``SnapshotManager._mirror``, which
+    only the writer advances), so planner and writer share no mutable
+    state and the planner never touches host chunk layout at all."""
     key: str
     shape: tuple
     dtype: str
     nbytes: int
     base: Optional[np.ndarray] = None        # full host image (base path)
-    deltas: Dict[int, bytes] = field(default_factory=dict)
-    # delta path: chunk index -> xor bytes (full bytes come from the
-    # mirror at write time, so the plan holds each changed chunk once)
+    tiles: Optional[np.ndarray] = None       # compacted changed 32 KiB tiles
+    bitmap: Optional[np.ndarray] = None      # per-tile changed flags
 
 
 class SnapshotManager:
@@ -139,6 +165,7 @@ class SnapshotManager:
                  root: Optional[Path] = None,
                  keep_last: int = 3,
                  async_mode: bool = False,
+                 writer_depth: int = 2,
                  auto_gc: bool = True,
                  delta: bool = True,
                  delta_mode: str = "auto"):
@@ -159,86 +186,161 @@ class SnapshotManager:
         self.delta_mode = delta_mode
         self.manifests: Dict[str, Manifest] = {}
         self.order: List[str] = []                 # snapshot chain
-        self._pool = ThreadPoolExecutor(max_workers=1) if async_mode else None
-        self._pending: Optional[Future] = None
+        self._writer = SnapshotWriter(self._write_bg, depth=writer_depth) \
+            if async_mode else None
+        self._futures: deque[Future] = deque()
+        self.last_info: Optional[SnapshotInfo] = None
         self._counter = 0
-        self._mirror: Dict[str, np.ndarray] = {}   # host copy of last state
+        # host byte image per tensor, advanced ONLY by the write path
+        # (writer thread in async mode) — the probing thread never reads it
+        self._mirror: Dict[str, np.ndarray] = {}
+        self._device_mirror = DeviceMirror()       # probe-side tiles (no H→D)
         self._prev_refs: Dict[str, List[str]] = {}
+
+    @property
+    def is_async(self) -> bool:
+        return self._writer is not None
+
+    @property
+    def writer_stats(self) -> dict:
+        return dict(self._writer.stats) if self._writer is not None else {}
 
     # ------------------------------------------------------------------
     def snapshot(self, state, *, step: int, aux: Optional[dict] = None,
                  block: bool = True) -> SnapshotInfo | Future:
         """Take a snapshot.  ``state`` is any pytree of arrays.
 
-        Planning (device diff + changed-tile transfer + mirror update) is
-        synchronous; store/manifest writes go to the background thread in
-        async mode."""
-        self.wait()              # delta planning needs the previous refs
+        Planning (device probe + changed-tile transfer) is synchronous;
+        with ``async_mode`` chunk compaction and the store/manifest writes
+        run on the background writer and ``block=False`` returns the
+        write's Future immediately — the caller's stall is the probe plus
+        queue backpressure, nothing else."""
+        self._reap()             # surface any finished/failed async write
         t0 = time.time()
+        tp = time.perf_counter()
         try:
-            plan = [self._plan_tensor(k, v) for k, v in _flatten(state)]
+            plan = self._plan_state(state)
         except BaseException:
             # a partial plan has already advanced some tensors' mirrors
             # while _prev_refs still points at the old chunks; drop both so
             # the next snapshot re-bases instead of recording stale refs
-            self._mirror.clear()
-            self._prev_refs.clear()
+            self._poison()
             raise
-        if self._pool is not None and not block:
-            self._pending = self._pool.submit(
-                self._write, plan, step, aux or {}, t0)
-            return self._pending
-        return self._write(plan, step, aux or {}, t0)
+        plan_ms = (time.perf_counter() - tp) * 1e3
+        if self._writer is not None:
+            try:
+                fut = self._writer.submit(plan, step, aux or {}, t0, plan_ms)
+            except BaseException:
+                self._poison()
+                raise
+            self._futures.append(fut)
+            return self.wait() if block else fut
+        return self._write_sync(plan, step, aux or {}, t0, plan_ms)
 
     def wait(self) -> Optional[SnapshotInfo]:
-        if self._pending is not None:
-            fut, self._pending = self._pending, None   # raise at most once
-            return fut.result()
-        return None
+        """Drain pending background writes; returns the last SnapshotInfo.
+        Raises (once) if any pending write failed, after re-basing."""
+        out = self.last_info if self._futures else None
+        try:
+            while self._futures:
+                out = self._futures.popleft().result()
+                self.last_info = out
+        except BaseException:
+            self._poison()
+            raise
+        return out
+
+    def close(self) -> None:
+        """Drain the writer and stop its thread."""
+        try:
+            self.wait()
+        finally:
+            if self._writer is not None:
+                self._writer.close()
+
+    def _reap(self) -> None:
+        """Non-blocking: collect already-finished async writes (keeps the
+        future list bounded and surfaces failures at the next snapshot)."""
+        while self._futures and self._futures[0].done():
+            fut = self._futures.popleft()
+            try:
+                self.last_info = fut.result()
+            except BaseException:
+                self._poison()
+                raise
+
+    def _poison(self) -> None:
+        """Re-base after a failure: drain valid queued writes, then drop
+        every mirror so the next snapshot records a full base image rather
+        than delta refs against parents that never landed."""
+        if self._writer is not None:
+            while self._futures:
+                fut = self._futures.popleft()
+                with contextlib.suppress(BaseException):
+                    self.last_info = fut.result()
+            self._writer.reset()
+        self._mirror.clear()
+        self._device_mirror.clear()
+        self._prev_refs.clear()
 
     # ------------------------------------------------------------------
-    def _plan_tensor(self, key: str, leaf) -> _TensorPlan:
-        if not hasattr(leaf, "dtype"):
-            leaf = np.asarray(leaf)
-        shape = tuple(leaf.shape)
-        dtype = str(leaf.dtype)
-        cb = self.store.chunk_bytes
-        prev = self._mirror.get(key)
-        usable = (self.delta and prev is not None
-                  and prev.shape == shape and str(prev.dtype) == dtype
-                  and key in self._prev_refs)
-        if not usable:
-            host = np.ascontiguousarray(np.asarray(leaf))
-            if host.shape != shape:
-                host = host.reshape(shape)   # ascontiguousarray 0-d -> 1-d
-            if host is leaf or host.base is not None:
-                host = host.copy()       # mirror must not alias caller data
-            self._mirror[key] = host
-            return _TensorPlan(key, shape, dtype, host.nbytes, base=host)
+    def _plan_state(self, state) -> List[_TensorPlan]:
+        """Probe the whole pytree in size-bucketed fused launches against
+        the device-resident mirror slots — this is ALL the work the
+        calling thread does per tensor.  Leaves the probe reports as
+        un-probed (first snapshot, shape/dtype change, bucket membership
+        change) fall back to full base images; the probe seeded their
+        slots, so the next round diffs them."""
+        flat = [(k, leaf if hasattr(leaf, "dtype") else np.asarray(leaf))
+                for k, leaf in _flatten(state)]
+        probes = {}
+        if self.delta and flat:
+            probes = probe_leaves(dict(flat), mode=self.delta_mode,
+                                  mirror=self._device_mirror)
+        plans = []
+        for key, leaf in flat:
+            pr = probes.get(key)
+            if pr is None:
+                plans.append(self._plan_base(key, leaf))
+            else:
+                tiles, bitmap, nbytes = pr
+                plans.append(_TensorPlan(key, tuple(leaf.shape),
+                                         str(leaf.dtype), nbytes,
+                                         tiles=tiles, bitmap=bitmap))
+        return plans
 
-        # delta path: device-side probe, transfer only changed tiles; the
-        # upload mode emits store-ready per-chunk XOR records (the same
-        # records the volunteer uplink encoder pushes through ingest)
-        records, new_flat, nbytes = changed_blocks(
-            prev, leaf, mode=self.delta_mode, emit="records", chunk_bytes=cb)
-        plan = _TensorPlan(key, shape, dtype, nbytes)
-        if not records:
-            return plan                  # nothing moved, nothing to store
-        plan.deltas = records
-        self._mirror[key] = new_flat.view(prev.dtype).reshape(shape)
-        return plan
+    def _plan_base(self, key: str, leaf) -> _TensorPlan:
+        shape, dtype = tuple(leaf.shape), str(leaf.dtype)
+        host = np.ascontiguousarray(np.asarray(leaf))
+        if host.shape != shape:
+            host = host.reshape(shape)   # ascontiguousarray 0-d -> 1-d
+        if host is leaf or host.base is not None:
+            host = host.copy()       # plan must not alias caller data
+        return _TensorPlan(key, shape, dtype, host.nbytes, base=host)
 
-    def _write(self, plan: List[_TensorPlan], step: int, aux: dict,
-               t0: float) -> SnapshotInfo:
+    # ------------------------------------------------------------------
+    def _write_sync(self, plan, step, aux, t0, plan_ms) -> SnapshotInfo:
         try:
-            return self._write_inner(plan, step, aux, t0)
+            info = self._write_inner(plan, step, aux, t0)
         except BaseException:
-            # planning already advanced the mirror; a half-written store
-            # would make the NEXT diff record stale parent refs.  Drop the
-            # mirror so the next snapshot is a full base image.
-            self._mirror.clear()
-            self._prev_refs.clear()
+            # the probe already swapped the device mirror forward; a
+            # half-written store would make the NEXT diff record stale
+            # parent refs.  Drop the mirrors so the next snapshot is a
+            # full base image.
+            self._poison()
             raise
+        info.plan_ms = plan_ms
+        info.stall_ms = info.wall_s * 1e3    # inline: the trainer paid it all
+        self.last_info = info
+        return info
+
+    def _write_bg(self, plan, step, aux, t0, plan_ms) -> SnapshotInfo:
+        tw = time.perf_counter()
+        info = self._write_inner(plan, step, aux, t0)
+        info.plan_ms = plan_ms
+        info.stall_ms = plan_ms              # trainer paid only the plan
+        info.writer_ms = (time.perf_counter() - tw) * 1e3
+        return info
 
     def _write_inner(self, plan: List[_TensorPlan], step: int, aux: dict,
                      t0: float) -> SnapshotInfo:
@@ -247,42 +349,59 @@ class SnapshotManager:
         cb = self.store.chunk_bytes
         tensors = {}
         total = changed = reused = reused_bytes = 0
-        for p in plan:
-            total += p.nbytes
-            if p.base is not None:
-                flat = p.base.reshape(-1).view(np.uint8)
-                refs = self.store.put_buffer(memoryview(flat))
-                changed += len(refs)
-            else:
-                prev_refs = self._prev_refs[p.key]
-                new_flat = self._mirror[p.key].reshape(-1).view(np.uint8)
-                refs = []
-                for ci, pref in enumerate(prev_refs):
-                    xor = p.deltas.get(ci)
-                    if xor is None:
-                        refs.append(pref)
-                        reused += 1
-                        reused_bytes += max(
-                            0, min((ci + 1) * cb, p.nbytes) - ci * cb)
-                    else:
-                        s, e = ci * cb, min((ci + 1) * cb, p.nbytes)
-                        refs.append(self.store.put_delta(
-                            pref, xor, full_bytes=new_flat[s:e].tobytes()))
-                        changed += 1
-            tensors[p.key] = TensorEntry(p.shape, p.dtype, refs)
-            self._prev_refs[p.key] = refs
-        # chain reuse counts as dedup, as the v1 hash-everything path did
-        self.store.stats["dedup_bytes"] += reused_bytes
-        self.store.stats["dedup_chunks"] += reused
-        self._counter += 1
-        sid = f"snap-{self._counter:06d}-{sha256(str(step).encode())[:8]}"
-        parent = self.order[-1] if self.order else None
-        man = Manifest(sid, parent, step, time.time(), tensors, aux,
-                       kind="base" if parent is None else "diff")
-        self.manifests[sid] = man
-        self.order.append(sid)
-        if self.root is not None:
-            (self.root / "manifests" / f"{sid}.json").write_text(man.to_json())
+        # hold the store's gc lock across write + manifest commit so a
+        # concurrent mark/sweep can never see (and sweep) this snapshot's
+        # objects while its manifest is still unregistered
+        with self._gc_guard():
+            for p in plan:
+                total += p.nbytes
+                if p.base is not None:
+                    flat = np.asarray(p.base).reshape(-1).view(np.uint8)
+                    refs = self.store.put_buffer(memoryview(flat))
+                    changed += len(refs)
+                    self._mirror[p.key] = flat
+                else:
+                    # fold the probe's tiles into the writer's host image
+                    # and derive per-chunk XOR records — off the hot path
+                    prev_refs = self._prev_refs[p.key]
+                    records: Dict[int, bytes] = {}
+                    new_flat = None
+                    if p.bitmap is not None and p.bitmap.any():
+                        records, new_flat = chunk_records(
+                            self._mirror[p.key], p.tiles, p.bitmap,
+                            p.nbytes, cb)
+                    refs = []
+                    for ci, pref in enumerate(prev_refs):
+                        xor = records.get(ci)
+                        if xor is None:
+                            refs.append(pref)
+                            reused += 1
+                            reused_bytes += max(
+                                0, min((ci + 1) * cb, p.nbytes) - ci * cb)
+                        else:
+                            cs = ci * cb
+                            ce = min(cs + cb, p.nbytes)
+                            refs.append(self.store.put_delta(
+                                pref, xor,
+                                full_bytes=new_flat[cs:ce].tobytes()))
+                            changed += 1
+                    if new_flat is not None:
+                        self._mirror[p.key] = new_flat
+                tensors[p.key] = TensorEntry(p.shape, p.dtype, refs)
+                self._prev_refs[p.key] = refs
+            # chain reuse counts as dedup, as the v1 hash-everything path did
+            self.store.stats["dedup_bytes"] += reused_bytes
+            self.store.stats["dedup_chunks"] += reused
+            self._counter += 1
+            sid = f"snap-{self._counter:06d}-{sha256(str(step).encode())[:8]}"
+            parent = self.order[-1] if self.order else None
+            man = Manifest(sid, parent, step, time.time(), tensors, aux,
+                           kind="base" if parent is None else "diff")
+            self.manifests[sid] = man
+            self.order.append(sid)
+            if self.root is not None:
+                (self.root / "manifests" / f"{sid}.json") \
+                    .write_text(man.to_json())
         self.gc() if self.auto_gc else self._trim_manifests()
         return SnapshotInfo(
             snapshot_id=sid, step=step, kind=man.kind,
@@ -291,6 +410,10 @@ class SnapshotManager:
             dedup_bytes=self.store.stats["dedup_bytes"] - before_dedup,
             total_bytes=total,
             changed_chunks=changed, reused_chunks=reused)
+
+    def _gc_guard(self):
+        lock = getattr(self.store, "gc_lock", None)
+        return lock if lock is not None else contextlib.nullcontext()
 
     # ------------------------------------------------------------------
     def restore(self, snapshot_id: Optional[str] = None, *,
@@ -370,6 +493,7 @@ class SnapshotManager:
         -> (missing refs, bytes to move, bytes saved) for the given (or
         latest) snapshot — the same ``ChunkStore.transfer_plan`` the
         server's ``fetch_capsule`` uses."""
+        self.wait()
         sid = snapshot_id or (self.order[-1] if self.order else None)
         if sid is None:
             raise ValueError("no snapshots available")
@@ -388,12 +512,15 @@ class SnapshotManager:
 
     def gc(self) -> int:
         """Keep the last ``keep_last`` snapshots; mark the closure of their
-        refs (delta parents stay live) and sweep the store."""
-        self._trim_manifests()
-        live: set[str] = set()
-        for man in self.manifests.values():
-            live.update(man.all_refs())
-        return self.store.gc(live)
+        refs (delta parents stay live) and sweep the store.  Mark + sweep
+        run under the store's gc lock so an in-flight background write
+        commits its manifest before the live set is collected."""
+        with self._gc_guard():
+            self._trim_manifests()
+            live: set[str] = set()
+            for man in self.manifests.values():
+                live.update(man.all_refs())
+            return self.store.gc(live)
 
     def latest(self) -> Optional[str]:
         return self.order[-1] if self.order else None

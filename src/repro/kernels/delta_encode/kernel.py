@@ -18,6 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 LANE = 1024
 SUB = 8
@@ -97,6 +98,85 @@ def changed_bitmap(old: jax.Array, new: jax.Array, *,
         interpret=interpret,
     )(o32, n32)
     return changed, n
+
+
+def _fused_kernel(old_ref, new_ref, bitmap_ref, tiles_ref,
+                  cnt_ref, stage_ref, sem):
+    """Probe + gather in one pass: XOR the tile, flag it, and — only when it
+    changed — DMA the compacted tile into the next free output slot.
+
+    The SMEM counter persists across grid steps (TPU grids run sequentially
+    per core), so compacted tiles land in ascending tile order and the host
+    can recover tile indices from the bitmap alone."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        cnt_ref[0] = 0
+
+    d = jax.lax.bitwise_xor(old_ref[...], new_ref[...])
+    changed = jnp.any(d != 0)
+    bitmap_ref[0] = changed.astype(jnp.int32)
+
+    @pl.when(changed)
+    def _emit():
+        c = cnt_ref[0]
+        stage_ref[...] = d
+        copy = pltpu.make_async_copy(stage_ref,
+                                     tiles_ref.at[pl.ds(c, 1)], sem)
+        copy.start()
+        copy.wait()
+        cnt_ref[0] = c + 1
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_delta_records(old: jax.Array, new: jax.Array, *,
+                        interpret: bool = False):
+    """Single-launch probe+gather -> (bitmap (nblk,) i32, tiles, n).
+
+    ``tiles`` is (nblk, SUB, LANE) i32 with the k changed tiles compacted
+    into slots [0, k) in ascending tile order (k = bitmap.sum()); slots
+    past k are unwritten.  One kernel launch replaces the
+    ``changed_bitmap`` + host sync + ``gather_delta`` pipeline, so the
+    device-side cost of a snapshot probe is one pass over old/new and the
+    only D2H traffic is the bitmap plus the k changed tiles."""
+    assert old.shape == new.shape and old.dtype == new.dtype
+    o32, _ = _as_tiles(_bitcast_i32(old))
+    n32, n = _as_tiles(_bitcast_i32(new))
+    bitmap, tiles = fused_delta_tiles(o32, n32, interpret=interpret)
+    return bitmap, tiles, n
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fused_delta_tiles(o32: jax.Array, n32: jax.Array, *,
+                      interpret: bool = False):
+    """Tile-level fused probe+gather over pre-tiled (nblk, SUB, LANE) i32
+    inputs — the launch the bucketed tree diff issues once per size bucket
+    (inputs are per-leaf ``as_i32_tiles`` views concatenated on device)."""
+    nblk = o32.shape[0]
+    bitmap, tiles = pl.pallas_call(
+        _fused_kernel,
+        grid=(nblk,),
+        in_specs=[pl.BlockSpec((1, SUB, LANE), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((1, SUB, LANE), lambda i: (i, 0, 0))],
+        out_specs=[pl.BlockSpec((1,), lambda i: (i,)),
+                   pl.BlockSpec(memory_space=pltpu.ANY)],
+        out_shape=[jax.ShapeDtypeStruct((nblk,), jnp.int32),
+                   jax.ShapeDtypeStruct((nblk, SUB, LANE), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32),
+                        pltpu.VMEM((1, SUB, LANE), jnp.int32),
+                        pltpu.SemaphoreType.DMA],
+        interpret=interpret,
+    )(o32, n32)
+    return bitmap, tiles
+
+
+def as_i32_tiles(x: jax.Array):
+    """Public view helper: flat int32 image padded to whole (SUB, LANE)
+    tiles -> ((nblk, SUB, LANE) i32, element count before padding).  The
+    bucketed tree diff concatenates these per-leaf views so one fused
+    launch probes many leaves."""
+    return _as_tiles(_bitcast_i32(x))
 
 
 @jax.jit

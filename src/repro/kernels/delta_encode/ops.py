@@ -1,32 +1,77 @@
 """Jit'd wrapper + host-side compaction for differencing snapshots.
 
-Two entry points:
+Three entry points:
 
 * ``diff_blocks``/``patch_blocks`` — the original one-shot API: materialize
   the full delta, then compact on host (used by tests and small tensors).
-* ``changed_blocks``/``tree_changed_blocks`` — the snapshot hot path: a
-  probe-then-gather pipeline.  Pass 1 (``changed_bitmap`` kernel) writes
-  only one int32 per 32 KiB tile; the host fetches that tiny bitmap, and
-  pass 2 gathers + XORs just the changed tiles on device.  Unchanged
-  blocks never cross the device→host boundary — the paper's §III-E claim
-  that a differencing snapshot costs only the written-to blocks.
+* ``changed_blocks`` — the single-tensor snapshot/uplink hot path.  The
+  default is the *fused* kernel: one ``pallas_call`` probes old vs new and
+  DMA-compacts the changed tiles into the first k output slots, so a diff
+  costs one launch and the only D2H traffic is the tiny bitmap plus the k
+  changed tiles (paper §III-E: a differencing snapshot costs only the
+  written-to blocks).  ``fused=False`` keeps the legacy two-launch
+  probe-then-gather pipeline for comparison.
+* ``tree_changed_blocks`` — the whole-pytree diff.  Leaves are grouped
+  into size buckets (by power-of-two tile count) and each bucket's tile
+  views are concatenated into ONE fused launch, so an optimizer tree with
+  hundreds of small tensors diffs in O(size buckets) launches instead of
+  O(leaves).
+* ``probe_leaves`` — the SnapshotManager hot path: the same bucketed
+  fused diff, but against the mirror slots ALONE — no host ``old`` images
+  exist on the probing thread.  A missing or layout-mismatched slot seeds
+  itself from the new tiles and reports its leaves for re-base, so the
+  trainer-visible cost of a snapshot is exactly one probe plus the
+  changed-tile transfer; chunking/hashing live on the writer thread.
 
-The numpy ``ref`` mode mirrors the kernel bit-for-bit (used on hosts
-without a TPU runtime; the default when jax is on CPU).
+A ``DeviceMirror`` keeps the previous state resident on device
+(double-buffered: after each diff the *new* tiles become the mirror by
+reference swap, not copy), eliminating the per-probe H→D re-upload of the
+host mirror.  The numpy ``ref`` mode mirrors every kernel bit-for-bit
+(used on hosts without a TPU runtime; the default when jax is on CPU).
+
+``KERNEL_STATS`` counts launches and streamed bytes (ref-mode passes count
+as one launch each) — ``benchmarks/roofline.py`` reads it to prove
+launches-per-snapshot is O(buckets) and the probe runs at memory bandwidth.
 """
 from __future__ import annotations
 
+from typing import Any, Dict, Optional
+
 import numpy as np
 
-from repro.kernels.delta_encode.kernel import (LANE, SUB, TILE,
+from repro.kernels.delta_encode.kernel import (LANE, SUB, TILE, as_i32_tiles,
                                                changed_bitmap, delta_apply,
-                                               delta_encode, gather_delta)
-from repro.kernels.delta_encode.ref import delta_apply_ref, delta_encode_ref
+                                               delta_encode,
+                                               fused_delta_tiles, gather_delta)
+from repro.kernels.delta_encode.ref import (delta_apply_ref, delta_encode_ref,
+                                            fused_records_ref, fused_tiles_ref)
 
 TILE_BYTES = TILE * 4          # one (8, 1024) i32 tile = 32 KiB of state
+_EMPTY_TILES = np.zeros((0, SUB, LANE), np.int32)
 
 # dtypes the Pallas kernel can bitcast; everything else falls back to ref
 KERNEL_DTYPES = ("int32", "float32", "bfloat16", "float16", "int16")
+
+# leaves larger than this many tiles get their own launch; smaller ones are
+# concatenated per power-of-two size bucket (256 tiles = 8 MiB of state)
+MAX_BUCKET_TILES = 256
+
+# launch/bandwidth accounting for benchmarks/roofline.py; a ref-mode pass
+# over a (concatenated) tile view counts as one launch
+KERNEL_STATS = {"launches": 0, "probe_bytes": 0, "d2h_bytes": 0}
+
+
+def reset_kernel_stats() -> dict:
+    prev = dict(KERNEL_STATS)
+    for k in KERNEL_STATS:
+        KERNEL_STATS[k] = 0
+    return prev
+
+
+def _count_launch(tile_bytes: int, d2h: int) -> None:
+    KERNEL_STATS["launches"] += 1
+    KERNEL_STATS["probe_bytes"] += 2 * tile_bytes   # streams old + new
+    KERNEL_STATS["d2h_bytes"] += d2h
 
 
 def _resolve_mode(mode: str) -> str:
@@ -34,6 +79,51 @@ def _resolve_mode(mode: str) -> str:
         return mode
     import jax
     return "tpu" if jax.default_backend() == "tpu" else "ref"
+
+
+class DeviceMirror:
+    """Device-resident previous-state tiles, double-buffered per slot.
+
+    A slot holds the (nblk, 8, 1024) i32 tile view of the last state seen
+    for one leaf (or one size bucket's concatenation) plus a layout tag.
+    ``swap`` stores the *new* tiles by reference — the diff's own input —
+    so advancing the mirror after a snapshot costs zero copies and zero
+    H→D transfers; the device-memory cost is one extra state image (the
+    double buffer).  A slot may also pin the source leaf objects
+    (``refs``): when the next round presents the *same immutable* arrays,
+    the probe skips the launch outright — a frozen disk diffs for free."""
+
+    def __init__(self):
+        self._slots: Dict[Any, tuple] = {}  # key -> (layout, tiles, refs)
+
+    def get(self, key, layout):
+        ent = self._slots.get(key)
+        if ent is None or ent[0] != layout:
+            return None
+        return ent[1]
+
+    def refs(self, key, layout):
+        ent = self._slots.get(key)
+        if ent is None or ent[0] != layout:
+            return None
+        return ent[2]
+
+    def swap(self, key, layout, tiles, refs=None) -> None:
+        self._slots[key] = (layout, tiles, refs)
+
+    def drop(self, key=None) -> None:
+        if key is None:
+            self._slots.clear()
+        else:
+            self._slots.pop(key, None)
+
+    clear = drop
+
+    def __len__(self) -> int:
+        return len(self._slots)
+
+    def nbytes(self) -> int:
+        return sum(int(t.nbytes) for _, t, _ in self._slots.values())
 
 
 def diff_blocks(old, new, *, mode: str = "interpret"):
@@ -59,15 +149,57 @@ def patch_blocks(old, changed_tiles, bitmap, *, mode: str = "interpret"):
     return np.asarray(out)
 
 
+def _check_dtypes(old, new, mode: str) -> str:
+    """Validate the diff pair; returns the (possibly downgraded) mode.
+
+    old/new dtype mismatch is always an error — silently bitcasting two
+    different layouts would diff garbage.  A dtype the kernel cannot
+    bitcast downgrades kernel modes to ``ref``."""
+    old_dt = str(old.dtype if hasattr(old, "dtype")
+                 else np.asarray(old).dtype)
+    new_dt = str(new.dtype if hasattr(new, "dtype")
+                 else np.asarray(new).dtype)
+    if old_dt != new_dt:
+        raise TypeError(f"changed_blocks: old dtype {old_dt} != new dtype "
+                        f"{new_dt}; diff pairs must share a bit layout")
+    if mode != "ref" and (old_dt not in KERNEL_DTYPES
+                          or new_dt not in KERNEL_DTYPES):
+        return "ref"
+    return mode
+
+
+def _fetch_compacted(bitmap: np.ndarray, tiles_dev, tile_bytes: int):
+    """Host side of a fused launch: read the (tiny) bitmap, then transfer
+    only the k compacted tiles (padded to the next power of two so the
+    device slice sees O(log n) distinct shapes)."""
+    k = int(bitmap.sum())
+    if k == 0:
+        _count_launch(tile_bytes, bitmap.nbytes)
+        return np.zeros((0, SUB, LANE), np.int32)
+    padded = min(1 << (k - 1).bit_length(), bitmap.size)
+    tiles = np.asarray(tiles_dev[:padded])[:k]
+    _count_launch(tile_bytes, bitmap.nbytes + padded * TILE_BYTES)
+    return tiles
+
+
 def changed_blocks(old, new, *, mode: str = "auto", emit: str = "tiles",
-                   chunk_bytes: int = 0):
-    """Probe-then-gather diff of one tensor.
+                   chunk_bytes: int = 0, fused: bool = True,
+                   mirror: Optional[DeviceMirror] = None,
+                   mirror_key=None):
+    """Fused single-launch diff of one tensor.
 
     -> (changed_tiles (k, 8, 1024) i32 numpy, bitmap (nblk,) i32 numpy,
         nbytes).  ``mode``: "auto" (tpu kernel on TPU, numpy ref
     otherwise), "tpu", "interpret" (Pallas interpreter), or "ref".
     On the kernel paths only the bitmap and the k changed tiles are
-    transferred to host.
+    transferred to host.  ``fused=False`` uses the legacy two-launch
+    probe-then-gather pipeline.
+
+    ``mirror``/``mirror_key``: a ``DeviceMirror`` keeping the previous
+    state's tiles resident on device.  When the slot matches, the probe is
+    pure D2D (no H→D upload of ``old``) and the slot is swapped to the new
+    tiles afterwards.  ``old`` must still be the previous *host* image —
+    it feeds record compaction and the ref fallback.
 
     ``emit="records"`` is the *upload* mode: instead of raw tiles it
     returns ``(records, new_flat, nbytes)`` where ``records`` maps
@@ -78,14 +210,26 @@ def changed_blocks(old, new, *, mode: str = "auto", emit: str = "tiles",
     differencing path and the volunteer uplink encoder ride this mode.
     """
     host_old = old
-    mode = _resolve_mode(mode)
+    mode = _check_dtypes(old, new, _resolve_mode(mode))
     nbytes = int(old.nbytes) if hasattr(old, "nbytes") \
         else int(np.asarray(old).nbytes)
-    if mode != "ref" and str(new.dtype) not in KERNEL_DTYPES:
-        mode = "ref"                      # kernel can't bitcast this dtype
     if mode == "ref":
-        delta, bitmap = delta_encode_ref(old, new)
-        tiles = delta[bitmap.astype(bool)]
+        bitmap, tiles = fused_records_ref(old, new)
+        _count_launch(bitmap.size * TILE_BYTES, 0)
+    elif fused:
+        interpret = (mode == "interpret")
+        import jax.numpy as jnp
+        n32, _ = as_i32_tiles(jnp.asarray(new))
+        layout = (n32.shape[0], nbytes)
+        o32 = mirror.get(mirror_key, layout) if mirror is not None else None
+        if o32 is None:
+            import jax
+            o32, _ = as_i32_tiles(jax.device_put(old))
+        bm, tiles_dev = fused_delta_tiles(o32, n32, interpret=interpret)
+        bitmap = np.asarray(bm)
+        tiles = _fetch_compacted(bitmap, tiles_dev, n32.nbytes)
+        if mirror is not None:
+            mirror.swap(mirror_key, layout, n32)   # swap, not copy
     else:
         import jax
         import jax.numpy as jnp
@@ -95,6 +239,8 @@ def changed_blocks(old, new, *, mode: str = "auto", emit: str = "tiles",
         bitmap = np.asarray(bm)           # tiny: one i32 per 32 KiB
         idx = np.flatnonzero(bitmap)
         k = idx.size
+        tile_bytes = bitmap.size * TILE_BYTES
+        _count_launch(tile_bytes, bitmap.nbytes)
         if k == 0:
             tiles = np.zeros((0, SUB, LANE), np.int32)
         else:
@@ -106,6 +252,7 @@ def changed_blocks(old, new, *, mode: str = "auto", emit: str = "tiles",
                                   np.full(padded - k, idx[-1], idx.dtype)])
             tiles = np.asarray(gather_delta(old, new,
                                             jnp.asarray(idx, jnp.int32)))[:k]
+            _count_launch(tile_bytes, padded * TILE_BYTES)
     if emit == "tiles":
         return tiles, bitmap, nbytes
     if emit != "records":
@@ -130,37 +277,307 @@ def chunk_records(prev: np.ndarray, tiles: np.ndarray, bitmap: np.ndarray,
     if not bitmap.any():
         return {}, old_flat    # unchanged leaf: no records, no host copy
     new_flat = apply_tiles(old_flat.copy(), tiles, bitmap)
+    # touched chunk set, vectorized: each changed tile covers byte range
+    # [s, e) which spans chunks [s // cb, (e-1) // cb]
+    ti = np.flatnonzero(bitmap)
+    s = ti * TILE_BYTES
+    e = np.minimum(s + TILE_BYTES, nbytes)
+    valid = e > s
+    s, e = s[valid], e[valid]
     records: dict[int, bytes] = {}
-    chunks: set[int] = set()
-    for ti in np.flatnonzero(bitmap):
-        s = int(ti) * TILE_BYTES
-        e = min(s + TILE_BYTES, nbytes)
-        if e > s:
-            chunks.update(range(s // chunk_bytes,
-                                (e - 1) // chunk_bytes + 1))
-    for ci in sorted(chunks):
-        s, e = ci * chunk_bytes, min((ci + 1) * chunk_bytes, nbytes)
-        xor = old_flat[s:e] ^ new_flat[s:e]
+    if s.size == 0:
+        return records, new_flat
+    c0, c1 = s // chunk_bytes, (e - 1) // chunk_bytes
+    width = int((c1 - c0).max()) + 1         # chunks per tile, usually <= 2
+    cand = c0[:, None] + np.arange(width)[None, :]
+    chunks = np.unique(cand[cand <= c1[:, None]])
+    for ci in chunks:
+        cs, ce = int(ci) * chunk_bytes, min((int(ci) + 1) * chunk_bytes,
+                                            nbytes)
+        xor = old_flat[cs:ce] ^ new_flat[cs:ce]
         if xor.any():
-            records[ci] = xor.tobytes()
+            records[int(ci)] = xor.tobytes()
     return records, new_flat
 
 
-def tree_changed_blocks(old_tree, new_tree, *, mode: str = "auto"):
-    """Batched per-tensor diff over two pytrees.
+def _leaf_ntiles(nbytes: int) -> int:
+    n_i32 = -(-nbytes // 4)
+    return max(1, -(-n_i32 // TILE))
 
-    -> {keypath: (changed_tiles, bitmap, nbytes)} — one probe + gather per
-    leaf, keyed by ``jax.tree_util.keystr`` paths (the same keys snapshot
-    manifests use).
-    """
+
+def _leaf_meta(leaf) -> tuple:
+    """(nbytes, exact tile count, dtype str) of one leaf."""
+    arr = leaf if hasattr(leaf, "nbytes") else np.asarray(leaf)
+    nbytes = int(arr.nbytes)
+    n_i32 = -(-nbytes // 4)
+    return nbytes, -(-n_i32 // TILE), str(arr.dtype)
+
+
+def _frozen(x) -> bool:
+    """True when ``x`` cannot have been mutated in place: jax arrays are
+    immutable; numpy only counts with the writeable flag off."""
+    flags = getattr(x, "flags", None)
+    return flags is None or not flags.writeable
+
+
+def probe_leaves(news: Dict[str, Any], *, mode: str = "auto",
+                 mirror: DeviceMirror,
+                 bucketed: bool = True,
+                 max_bucket_tiles: int = MAX_BUCKET_TILES):
+    """The snapshot hot path's whole device-side cost: diff a dict of
+    leaves against the resident mirror tiles, no ``old`` images needed.
+
+    -> {key: (changed_tiles, bitmap, nbytes) | None}.  ``None`` means the
+    mirror had no matching slot — first snapshot, a shape/dtype change, or
+    a size bucket whose membership changed — and the caller must store
+    those leaves as full base images; their new tiles are installed as the
+    slot in the same pass, so the next round probes them.  Matched slots
+    are diffed in one fused launch per size bucket and swapped to the new
+    tiles (zero copies, zero H→D), so a whole-tree probe costs O(size
+    buckets) launches and the only host traffic is the bitmaps plus the
+    changed tiles.
+
+    In ``ref`` mode the mirror slots hold numpy tile images and the probe
+    is the vectorized oracle — bit-for-bit the kernel's results, same slot
+    lifecycle (CI runs the identical code path minus the launch)."""
+    mode = _resolve_mode(mode)
+    buckets: Dict[int, list] = {}
+    for key, leaf in news.items():
+        nbytes, ntiles, dt = _leaf_meta(leaf)
+        if mode != "ref" and dt not in KERNEL_DTYPES:
+            bid = -2          # kernel tree, ref-only dtype: leaf-wise ref
+        elif not bucketed or ntiles > max_bucket_tiles:
+            bid = -3                             # standalone launches
+        else:
+            bid = (ntiles - 1).bit_length()      # pow2 size class
+        buckets.setdefault(bid, []).append((key, nbytes, ntiles, dt))
+    out: Dict[str, Any] = {}
+    for bid, leaves in sorted(buckets.items()):
+        if bid == -2:
+            for key, nbytes, ntiles, dt in leaves:
+                out[key] = _probe_slot(key, news[key],
+                                       (nbytes, ntiles, dt), "ref", mirror)
+        elif bid == -3:
+            for key, nbytes, ntiles, dt in leaves:
+                out[key] = _probe_slot(key, news[key],
+                                       (nbytes, ntiles, dt), mode, mirror)
+        else:
+            out.update(_probe_bucket(bid, leaves, news, mode, mirror))
+    return out
+
+
+def _probe_slot(key, leaf, meta: tuple, mode: str, mirror: DeviceMirror):
+    """Probe one standalone leaf against its own mirror slot (or seed it)."""
+    nbytes, ntiles, dt = meta
+    layout = ("leaf", nbytes, ntiles, dt)
+    prev = mirror.refs(key, layout)
+    if prev is not None and prev[0] is leaf and _frozen(leaf):
+        # same immutable array as last round: unchanged by construction
+        return _EMPTY_TILES, np.zeros(ntiles, np.int32), nbytes
+    if mode == "ref":
+        n32 = _ref_tiles(leaf)
+        o32 = mirror.get(key, layout)
+        mirror.swap(key, layout, n32, (leaf,))
+        if o32 is None:
+            return None
+        if ntiles == 0:
+            return _EMPTY_TILES, np.zeros(0, np.int32), nbytes
+        bitmap, tiles = fused_tiles_ref(o32, n32)
+        _count_launch(n32.nbytes, 0)
+        return tiles, bitmap, nbytes
+    import jax.numpy as jnp
+    n32, _ = as_i32_tiles(jnp.asarray(leaf))
+    o32 = mirror.get(key, layout)
+    mirror.swap(key, layout, n32, (leaf,))
+    if o32 is None:
+        return None
+    if ntiles == 0:
+        return _EMPTY_TILES, np.zeros(0, np.int32), nbytes
+    bm, tiles_dev = fused_delta_tiles(o32, n32,
+                                      interpret=(mode == "interpret"))
+    bitmap = np.asarray(bm)
+    tiles = _fetch_compacted(bitmap, tiles_dev, int(n32.nbytes))
+    return tiles, bitmap, nbytes
+
+
+def _probe_bucket(bid: int, leaves: list, news: dict, mode: str,
+                  mirror: DeviceMirror):
+    """One fused launch over a size bucket's concatenated leaves, against
+    the bucket's mirror slot.  A layout mismatch (bucket membership or any
+    leaf's shape/dtype changed) re-seeds the slot and reports every leaf
+    as un-probed (None) — the re-base amplification is confined to one
+    bucket and only on layout changes."""
+    layout = tuple((key, nb, nt, dt) for key, nb, nt, dt in leaves)
+    skey = ("bucket", bid)
+    if all(nt == 0 for _, _, nt, _ in leaves):   # all-empty bucket
+        seeded = mirror.get(skey, layout) is not None
+        mirror.swap(skey, layout, _EMPTY_TILES)
+        return {key: ((_EMPTY_TILES, np.zeros(0, np.int32), nb)
+                      if seeded else None)
+                for key, nb, _, _ in leaves}
+    leaf_objs = [news[key] for key, _, _, _ in leaves]
+    prev = mirror.refs(skey, layout)
+    if prev is not None and len(prev) == len(leaf_objs) and all(
+            n is p and _frozen(n) for n, p in zip(leaf_objs, prev)):
+        # every leaf is the same immutable array the slot was built from
+        # (a frozen disk): unchanged by construction, no launch at all
+        return {key: (_EMPTY_TILES, np.zeros(nt, np.int32), nb)
+                for key, nb, nt, _ in leaves}
+    if mode == "ref":
+        parts = [_ref_tiles(x) for x in leaf_objs]
+        n32 = parts[0] if len(parts) == 1 else np.concatenate(parts)
+        o32 = mirror.get(skey, layout)
+        mirror.swap(skey, layout, n32, tuple(leaf_objs))
+        if o32 is None:
+            return {key: None for key, _, _, _ in leaves}
+        bitmap, tiles = fused_tiles_ref(o32, n32)
+        _count_launch(n32.nbytes, 0)
+    else:
+        import jax.numpy as jnp
+        parts = [as_i32_tiles(jnp.asarray(x))[0] for x in leaf_objs]
+        n32 = parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        o32 = mirror.get(skey, layout)
+        mirror.swap(skey, layout, n32, tuple(leaf_objs))
+        if o32 is None:
+            return {key: None for key, _, _, _ in leaves}
+        bm, tiles_dev = fused_delta_tiles(o32, n32,
+                                          interpret=(mode == "interpret"))
+        bitmap = np.asarray(bm)
+        tiles = _fetch_compacted(bitmap, tiles_dev, int(n32.nbytes))
+    out = {}
+    off = pos = 0
+    for key, nbytes, ntiles, _dt in leaves:
+        bm_leaf = bitmap[off:off + ntiles]
+        k = int(bm_leaf.sum())
+        out[key] = (tiles[pos:pos + k], bm_leaf, nbytes)
+        off += ntiles
+        pos += k
+    return out
+
+
+def tree_changed_blocks(old_tree, new_tree, *, mode: str = "auto",
+                        mirror: Optional[DeviceMirror] = None,
+                        bucketed: bool = True,
+                        max_bucket_tiles: int = MAX_BUCKET_TILES):
+    """Bucketed diff over two pytrees.
+
+    -> {keypath: (changed_tiles, bitmap, nbytes)}, keyed by
+    ``jax.tree_util.keystr`` paths (the same keys snapshot manifests use).
+
+    Leaves are grouped into size buckets (power-of-two tile count, capped
+    at ``max_bucket_tiles``); each bucket's per-leaf i32 tile views are
+    concatenated into ONE fused launch, so the whole tree diffs in
+    O(size buckets) launches instead of one probe + gather per leaf.
+    Leaves above the cap launch standalone (no concat copy of big params).
+    With a ``DeviceMirror``, each bucket's concatenation (and each
+    standalone leaf) is diffed against its device-resident previous image
+    and the slot is swapped to the new tiles — zero H→D re-upload.
+    ``bucketed=False`` keeps the legacy one-launch-per-leaf pipeline."""
     import jax
-    olds = {jax.tree_util.keystr(p): l for p, l in
+    olds = {jax.tree_util.keystr(p): leaf for p, leaf in
             jax.tree_util.tree_flatten_with_path(old_tree)[0]}
-    news = {jax.tree_util.keystr(p): l for p, l in
+    news = {jax.tree_util.keystr(p): leaf for p, leaf in
             jax.tree_util.tree_flatten_with_path(new_tree)[0]}
     if olds.keys() != news.keys():
         raise ValueError("old/new trees have different structures")
-    return {k: changed_blocks(olds[k], news[k], mode=mode) for k in olds}
+    return diff_leaves(olds, news, mode=mode, mirror=mirror,
+                       bucketed=bucketed, max_bucket_tiles=max_bucket_tiles)
+
+
+def diff_leaves(olds: Dict[str, Any], news: Dict[str, Any], *,
+                mode: str = "auto",
+                mirror: Optional[DeviceMirror] = None,
+                bucketed: bool = True,
+                max_bucket_tiles: int = MAX_BUCKET_TILES):
+    """Dict-level core of ``tree_changed_blocks``: diff ``news[k]`` against
+    ``olds[k]`` per key, with size-bucketed fused launches.  The snapshot
+    manager calls this directly with its host mirror as ``olds`` so leaf
+    keys stay exactly the manifest keys."""
+    if olds.keys() != news.keys():
+        raise ValueError("old/new leaf sets differ")
+    mode = _resolve_mode(mode)
+    if not bucketed:
+        return {k: changed_blocks(olds[k], news[k], mode=mode,
+                                  mirror=mirror, mirror_key=k)
+                for k in olds}
+
+    # partition leaves: ref-only dtypes go leaf-wise through ref; the rest
+    # bucket by power-of-two tile count
+    out: Dict[str, tuple] = {}
+    buckets: Dict[int, list] = {}
+    for key in olds:
+        leaf_mode = _check_dtypes(olds[key], news[key], mode)
+        nbytes = int(news[key].nbytes) if hasattr(news[key], "nbytes") \
+            else int(np.asarray(news[key]).nbytes)
+        ntiles = _leaf_ntiles(nbytes)
+        if leaf_mode == "ref" and mode != "ref":
+            bid = -2          # kernel tree, ref-only dtype: leaf-wise ref
+        elif ntiles > max_bucket_tiles:
+            bid = -3                             # standalone launches
+        else:
+            bid = (ntiles - 1).bit_length()      # pow2 size class
+        buckets.setdefault(bid, []).append((key, nbytes, ntiles))
+    for bid, leaves in sorted(buckets.items()):
+        if bid == -2:
+            for key, nbytes, _ in leaves:       # kernel tree, ref-only leaf
+                out[key] = changed_blocks(olds[key], news[key], mode="ref")
+            continue
+        if bid == -3:
+            for key, nbytes, _ in leaves:       # big leaf: own launch
+                out[key] = changed_blocks(olds[key], news[key], mode=mode,
+                                          mirror=mirror, mirror_key=key)
+            continue
+        out.update(_diff_bucket(bid, leaves, olds, news, mode, mirror))
+    return out
+
+
+def _diff_bucket(bid: int, leaves: list, olds: dict, news: dict,
+                 mode: str, mirror: Optional[DeviceMirror]):
+    """One fused launch (or one ref pass) over a size bucket's leaves."""
+    layout = tuple((key, nb, nt) for key, nb, nt in leaves)
+    if mode == "ref":
+        o32 = np.concatenate([_ref_tiles(olds[k]) for k, _, _ in leaves])
+        n32 = np.concatenate([_ref_tiles(news[k]) for k, _, _ in leaves])
+        bitmap, tiles = fused_tiles_ref(o32, n32)
+        _count_launch(n32.nbytes, 0)
+    else:
+        import jax
+        import jax.numpy as jnp
+        interpret = (mode == "interpret")
+        n32 = jnp.concatenate(
+            [as_i32_tiles(jnp.asarray(news[k]))[0] for k, _, _ in leaves])
+        o32 = mirror.get(("bucket", bid), layout) if mirror is not None \
+            else None
+        if o32 is None:
+            o32 = jnp.concatenate(
+                [as_i32_tiles(jax.device_put(olds[k]))[0]
+                 for k, _, _ in leaves])
+        bm, tiles_dev = fused_delta_tiles(o32, n32, interpret=interpret)
+        bitmap = np.asarray(bm)
+        tiles = _fetch_compacted(bitmap, tiles_dev, int(n32.nbytes))
+        if mirror is not None:
+            mirror.swap(("bucket", bid), layout, n32)
+    # split the concatenated bitmap + ascending-order compacted tiles back
+    # into per-leaf results
+    out = {}
+    off = pos = 0
+    for key, nbytes, ntiles in leaves:
+        bm_leaf = bitmap[off:off + ntiles]
+        k = int(bm_leaf.sum())
+        out[key] = (tiles[pos:pos + k], bm_leaf, nbytes)
+        off += ntiles
+        pos += k
+    return out
+
+
+def _ref_tiles(x) -> np.ndarray:
+    """Numpy mirror of ``as_i32_tiles``: flat i32 view padded to whole
+    (8, 1024) tiles."""
+    b = np.ascontiguousarray(np.asarray(x)).reshape(-1).view(np.uint8)
+    pad = (-b.size) % (TILE * 4)
+    if pad:
+        b = np.concatenate([b, np.zeros(pad, np.uint8)])
+    return b.view(np.int32).reshape(-1, SUB, LANE)
 
 
 def apply_tiles(flat_u8: np.ndarray, tiles: np.ndarray,
@@ -172,11 +589,20 @@ def apply_tiles(flat_u8: np.ndarray, tiles: np.ndarray,
     tile is clipped to the buffer length.  Returns ``flat_u8``.
     """
     nbytes = flat_u8.size
-    for j, ti in enumerate(np.flatnonzero(bitmap)):
-        s = int(ti) * TILE_BYTES
+    idx = np.flatnonzero(bitmap)
+    if idx.size == 0:
+        return flat_u8
+    tb = np.ascontiguousarray(tiles[:idx.size]).reshape(idx.size, -1) \
+        .view(np.uint8)                       # (k, TILE_BYTES)
+    nfull = nbytes // TILE_BYTES
+    body = idx < nfull
+    if body.any():
+        # one reshaped scatter-XOR for every whole tile
+        view = flat_u8[:nfull * TILE_BYTES].reshape(nfull, TILE_BYTES)
+        view[idx[body]] ^= tb[body]
+    for j in np.flatnonzero(~body):           # at most the one tail tile
+        s = int(idx[j]) * TILE_BYTES
         e = min(s + TILE_BYTES, nbytes)
-        if e <= s:
-            continue
-        tb = np.frombuffer(np.ascontiguousarray(tiles[j]), np.uint8)[:e - s]
-        flat_u8[s:e] ^= tb
+        if e > s:
+            flat_u8[s:e] ^= tb[j, :e - s]
     return flat_u8

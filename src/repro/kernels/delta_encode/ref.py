@@ -17,6 +17,24 @@ def delta_encode_ref(old: np.ndarray, new: np.ndarray):
     return d, changed
 
 
+def fused_records_ref(old: np.ndarray, new: np.ndarray):
+    """Oracle for the fused probe+gather kernel: (bitmap, compacted tiles).
+
+    Bit-for-bit what ``fused_delta_records`` emits — compacted changed
+    tiles in ascending tile order — computed in one vectorized pass."""
+    d, changed = delta_encode_ref(old, new)
+    return changed, d[changed.astype(bool)]
+
+
+def fused_tiles_ref(o32: np.ndarray, n32: np.ndarray):
+    """Tile-level oracle for ``fused_delta_tiles``: inputs are already
+    (nblk, 8, 1024) int32 views (the bucketed tree diff's concatenated
+    per-leaf tiles)."""
+    d = o32 ^ n32
+    changed = np.any(d != 0, axis=(1, 2)).astype(np.int32)
+    return changed, d[changed.astype(bool)]
+
+
 def delta_apply_ref(old: np.ndarray, delta: np.ndarray) -> np.ndarray:
     o = np.asarray(old)
     ob = o.reshape(-1).view(np.uint8)

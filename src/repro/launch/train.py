@@ -77,6 +77,19 @@ def main(argv=None) -> dict:
                     help="replicate snapshot chains to N peer stores "
                          "(async, bounded outbox); the run survives a "
                          "primary store loss")
+    ap.add_argument("--async-writer", action="store_true",
+                    help="zero-stall snapshots: the round pays only the "
+                         "device probe + changed-tile transfer; hashing, "
+                         "RLE, store writes and chain rebase run on a "
+                         "background writer thread (per-round stall is "
+                         "reported as snapshot_stall_ms; a half-written "
+                         "snapshot is never visible)")
+    ap.add_argument("--writer-depth", type=int, default=2,
+                    help="bounded queue depth for --async-writer; when the "
+                         "writer falls behind by this many snapshots the "
+                         "trainer blocks (counted as backpressure_ms in "
+                         "the writer stats, i.e. visible stall) instead of "
+                         "queueing unboundedly")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -113,7 +126,8 @@ def main(argv=None) -> dict:
         # fan out through the bounded outbox the trainer pumps per round
         store = replicas = ReplicaSet(store, peers)
     snaps = SnapshotManager(store, root=root / "snaps" if root else None,
-                            keep_last=3)
+                            keep_last=3, async_mode=args.async_writer,
+                            writer_depth=args.writer_depth)
     sched = VolunteerScheduler(replication=args.replication,
                                quorum=args.quorum, deadline_s=30.0,
                                clock=SimClock())
@@ -179,7 +193,9 @@ def main(argv=None) -> dict:
             print(f"step {st.step:4d} loss {st.loss:.4f} "
                   f"units {st.units} reissued {st.reissued} "
                   f"dup {st.duplicates} invalid {st.invalid} "
-                  f"snap_bytes {st.snapshot_bytes}{up}")
+                  f"snap_bytes {st.snapshot_bytes} "
+                  f"stall_ms {st.snapshot_stall_ms:.1f}{up}")
+    snaps.close()                    # drain pending background writes
     wall = time.time() - t0
     tokens = args.steps * args.micro * args.batch * args.seq
     summary = {
@@ -189,7 +205,13 @@ def main(argv=None) -> dict:
         "scheduler": dict(trainer.sched.stats),
         "store": dict(store.stats),
         "alive_workers": sum(w.alive for w in trainer.workers.values()),
+        "snapshot_stall_ms": round(sum(
+            h.snapshot_stall_ms for h in trainer.history), 2),
     }
+    if args.async_writer:
+        summary["snapshot_writer"] = {
+            k: round(v, 2) if isinstance(v, float) else v
+            for k, v in snaps.writer_stats.items()}
     if replicas is not None:
         replicas.flush()             # durability: drain the outbox on exit
         summary["replication"] = {**dict(replicas.rstats),

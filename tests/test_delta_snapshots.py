@@ -311,21 +311,21 @@ def test_failed_planning_does_not_corrupt_next_snapshot(monkeypatch):
     b = rng.standard_normal(20_000).astype(np.float32)
     mgr.snapshot({"a": a, "b": b}, step=0)
 
-    real = snapmod.changed_blocks
+    real = snapmod.chunk_records
     calls = {"n": 0}
 
-    def boom(old, new, **kw):
+    def boom(*a_, **kw):
         calls["n"] += 1
         if calls["n"] == 2:              # tensor "a" planned, "b" explodes
             raise RuntimeError("device fell over")
-        return real(old, new, **kw)
+        return real(*a_, **kw)
 
-    monkeypatch.setattr(snapmod, "changed_blocks", boom)
+    monkeypatch.setattr(snapmod, "chunk_records", boom)
     a2, b2 = a.copy(), b.copy()
     a2[0], b2[0] = 1.5, 2.5
     with pytest.raises(RuntimeError):
         mgr.snapshot({"a": a2, "b": b2}, step=1)
-    monkeypatch.setattr(snapmod, "changed_blocks", real)
+    monkeypatch.setattr(snapmod, "chunk_records", real)
     a3, b3 = a2.copy(), b2.copy()
     a3[1], b3[1] = 3.5, 4.5
     mgr.snapshot({"a": a3, "b": b3}, step=2)
