@@ -1,19 +1,33 @@
-"""Perf-trajectory gate for the snapshot stall benchmark.
+"""Perf-trajectory gate for the benchmark JSON outputs.
 
-Compares a fresh ``table2_snapshots --json`` run against the committed
-baseline (``benchmarks/BENCH_table2.json``) and fails when the trainer's
-per-round ``stall_ms`` regresses by more than ``--tolerance`` (default
-25%).  A small absolute floor (``--floor-ms``) keeps shared-runner noise
-from failing rows whose stall is near zero — a 1 ms → 1.4 ms wobble is
-jitter, a 10 ms → 14 ms jump is a regression.
+Dispatches on the ``kind`` field of the current-run JSON:
 
-Only the write-heavy rows gate by default: ``cpu``/``primes`` snapshot an
-unchanged state, so their stall is pure probe overhead at microsecond
-scale and 25% of it is below timer noise.
+* **snapshot stall** (no ``kind``, from ``table2_snapshots --json``) —
+  compares against ``benchmarks/BENCH_table2.json`` and fails when the
+  trainer's per-round ``stall_ms`` regresses by more than ``--tolerance``
+  (default 25%).  A small absolute floor (``--floor-ms``) keeps
+  shared-runner noise from failing rows whose stall is near zero — a
+  1 ms → 1.4 ms wobble is jitter, a 10 ms → 14 ms jump is a regression.
+  Only the write-heavy rows gate by default: ``cpu``/``primes`` snapshot
+  an unchanged state, so their stall is pure probe overhead at
+  microsecond scale and 25% of it is below timer noise.
+
+* **scheduler** (``kind: "scheduler"``, from ``server_throughput
+  --json``) — compares against ``benchmarks/BENCH_scheduler.json``.  The
+  load-bearing check is ``flat_ratio``: p50 dispatch at the largest
+  fleet/shard row must stay within ``--flat-limit`` (default 2.0) of the
+  smallest — the O(1)-dispatch claim, computed *within* one run so it is
+  immune to runner speed.  Per-row p50s also gate against the baseline,
+  but loosely (``--tolerance`` doubled + ``--floor-us``): absolute
+  microsecond timings vary wildly across shared runners.
 
     PYTHONPATH=src:. python -m benchmarks.table2_snapshots \
         --tiny --rounds 3 --json /tmp/now.json
     PYTHONPATH=src:. python -m benchmarks.check_regression /tmp/now.json
+
+    PYTHONPATH=src:. python -m benchmarks.server_throughput \
+        --tiny --json /tmp/sched.json
+    PYTHONPATH=src:. python -m benchmarks.check_regression /tmp/sched.json
 """
 from __future__ import annotations
 
@@ -23,6 +37,7 @@ import sys
 from pathlib import Path
 
 BASELINE = Path(__file__).parent / "BENCH_table2.json"
+SCHED_BASELINE = Path(__file__).parent / "BENCH_scheduler.json"
 
 # rows where the stall is real work being hidden (the zero-stall claim);
 # frozen workloads stall for ~nothing in both modes and only add noise
@@ -54,25 +69,73 @@ def check(current: dict, baseline: dict, tolerance: float,
     return failures
 
 
+def check_scheduler(current: dict, baseline: dict, tolerance: float,
+                    floor_us: float, flat_limit: float) -> list[str]:
+    """-> list of human-readable failures (empty = pass)."""
+    failures = []
+    fr = current.get("flat_ratio")
+    if fr is None:
+        failures.append("flat_ratio missing (gate rows absent from run)")
+    else:
+        gate = current.get("gate", ["?", "?"])
+        verdict = "FAIL" if fr > flat_limit else "ok"
+        print(f"  flat_ratio {gate[1]}/{gate[0]} = {fr:.2f}  "
+              f"(limit {flat_limit:.2f})  {verdict}")
+        if fr > flat_limit:
+            failures.append(f"flat_ratio {fr:.2f} > {flat_limit:.2f}: "
+                            f"dispatch is no longer flat in fleet size")
+    cur = {r["name"]: r for r in current["rows"]}
+    base = {r["name"]: r for r in baseline["rows"]}
+    for name, b in base.items():
+        if name not in cur:
+            failures.append(f"{name}: row missing from current run")
+            continue
+        bv, cv = float(b["p50_us"]), float(cur[name]["p50_us"])
+        limit = bv * (1.0 + 2.0 * tolerance) + floor_us
+        verdict = "FAIL" if cv > limit else "ok"
+        print(f"  {name:16s} p50_us {bv:8.2f} -> {cv:8.2f}  "
+              f"(limit {limit:.2f})  {verdict}")
+        if cv > limit:
+            failures.append(f"{name}: p50_us {cv:.2f} > limit {limit:.2f} "
+                            f"(baseline {bv:.2f})")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("current", help="JSON from table2_snapshots --json")
-    ap.add_argument("--baseline", default=str(BASELINE))
+    ap.add_argument("current", help="JSON from table2_snapshots --json or "
+                                    "server_throughput --json")
+    ap.add_argument("--baseline", default=None,
+                    help="defaults to the committed baseline matching the "
+                         "current run's kind")
     ap.add_argument("--tolerance", type=float, default=0.25,
                     help="allowed relative stall_ms growth (0.25 = +25%%)")
     ap.add_argument("--floor-ms", type=float, default=2.0,
                     help="absolute slack added to every limit (timer noise)")
+    ap.add_argument("--floor-us", type=float, default=100.0,
+                    help="absolute per-row slack for scheduler p50 gating")
+    ap.add_argument("--flat-limit", type=float, default=2.0,
+                    help="max allowed scheduler flat_ratio (O(1) dispatch)")
     args = ap.parse_args(argv)
     current = json.loads(Path(args.current).read_text())
-    baseline = json.loads(Path(args.baseline).read_text())
-    print(f"stall regression gate (tolerance +{args.tolerance:.0%}, "
-          f"floor {args.floor_ms}ms):")
-    failures = check(current, baseline, args.tolerance, args.floor_ms)
+    kind = current.get("kind", "stall")
+    default_base = SCHED_BASELINE if kind == "scheduler" else BASELINE
+    baseline = json.loads(Path(args.baseline or default_base).read_text())
+    if kind == "scheduler":
+        print(f"scheduler dispatch gate (flat_limit {args.flat_limit:.2f}, "
+              f"tolerance +{2 * args.tolerance:.0%}, "
+              f"floor {args.floor_us}us):")
+        failures = check_scheduler(current, baseline, args.tolerance,
+                                   args.floor_us, args.flat_limit)
+    else:
+        print(f"stall regression gate (tolerance +{args.tolerance:.0%}, "
+              f"floor {args.floor_ms}ms):")
+        failures = check(current, baseline, args.tolerance, args.floor_ms)
     if failures:
         print("\n".join(f"REGRESSION: {f}" for f in failures),
               file=sys.stderr)
         return 1
-    print("stall within budget on all gated rows")
+    print("within budget on all gated rows")
     return 0
 
 

@@ -59,6 +59,9 @@ class RoundStats:
     snapshot_bytes: int = 0
     snapshot_stall_ms: float = 0.0   # trainer-visible snapshot time only
     replicated: int = 0          # replication messages pumped this round
+    # sharded scheduler plane accounting (0 on a single scheduler)
+    steals: int = 0              # work-steal batches this round
+    refills: int = 0             # watermark refill batches this round
     # delta-aware uplink accounting (0 unless uplink mode is on)
     uplink_dense: int = 0        # int8 payload had volunteers sent it whole
     uplink_moved: int = 0        # deduped bytes actually transferred up
@@ -80,6 +83,12 @@ class VolunteerTrainer:
                  uplink_mode: str = "auto",
                  replicas=None):
         """grad_fn(params, batch)->(loss, grads); apply_fn(state, grads)->state.
+
+        ``scheduler`` may be a single ``VolunteerScheduler`` or a
+        ``ShardedScheduler`` plane (``core/shardplane.py``) — the trainer
+        drives both through the same request/report/drain interface; with
+        a plane, each loop sweep is one quorum-validation batch and
+        ``RoundStats.steals``/``refills`` report cross-shard traffic.
 
         ``compress_grads``: int8 + error-feedback compression of the combined
         gradient before the optimizer — the volunteer-uplink analogue of the
@@ -289,12 +298,15 @@ class VolunteerTrainer:
         self.state = self.apply_fn(self.state, grads)
         self._grad_cache.clear()
 
+        after = dict(self.sched.stats)
         stats = RoundStats(
             step=step, loss=float(np.mean(losses)),
             units=self.micro_batches,
-            reissued=self.sched.stats["reissued"] - before["reissued"],
-            duplicates=self.sched.stats["duplicates"] - before["duplicates"],
-            invalid=self.sched.stats["invalid_results"] - before["invalid_results"],
+            reissued=after["reissued"] - before["reissued"],
+            duplicates=after["duplicates"] - before["duplicates"],
+            invalid=after["invalid_results"] - before["invalid_results"],
+            steals=after.get("steals", 0) - before.get("steals", 0),
+            refills=after.get("refills", 0) - before.get("refills", 0),
             uplink_dense=self._round_uplink[0],
             uplink_moved=self._round_uplink[1],
             uplink_dedup=self._round_uplink[2],

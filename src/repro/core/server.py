@@ -137,8 +137,12 @@ class VBoincServer:
                 proj, worker_id, unit_id, update):
             return False
         accepted = proj.scheduler.report(worker_id, unit_id, result_hash)
-        if accepted and unit_id in proj.uplink_results:
-            self._fold_canonical(proj, unit_id)
+        # fold every unit whose quorum is now met — with a batched
+        # scheduler (ShardedScheduler) a unit may complete at a *later*
+        # round flush than the report that supplied the quorum result, so
+        # folding keys off unit.completed, not this call's return value
+        if proj.uplink_results:
+            self._fold_ready(proj)
         return accepted
 
     def _ingest_update(self, proj: Project, worker_id: str, unit_id: int,
@@ -177,6 +181,14 @@ class VBoincServer:
         while len(d) > self.UPLINK_KEEP:      # oldest unit ids first
             d.pop(next(iter(d)))
 
+    def _fold_ready(self, proj: Project) -> None:
+        """Fold canonical updates for every completed unit still holding
+        replica uploads (bounded by UPLINK_KEEP)."""
+        for uid in list(proj.uplink_results):
+            unit = proj.scheduler.units.get(uid)
+            if unit is not None and unit.completed:
+                self._fold_canonical(proj, uid)
+
     def _fold_canonical(self, proj: Project, unit_id: int) -> None:
         unit = proj.scheduler.units.get(unit_id)
         ups = proj.uplink_results.get(unit_id, {})
@@ -196,6 +208,7 @@ class VBoincServer:
         canonical round state the uplink reconstructs, proving the server
         no longer depends on the volunteer re-shipping full gradients."""
         proj = self.projects[project]
+        self._fold_ready(proj)      # batched schedulers fold lazily
         update = proj.canonical_updates[unit_id]
         return decode_update(self.store, update)
 
@@ -224,6 +237,23 @@ class VBoincServer:
         except (IndexError, ValueError, IOError):
             store.mark_up(old)     # bad target must not brick the primary
             raise
+
+    def fail_shard(self, project: str, index: int) -> Dict[str, int]:
+        """Scheduler-shard loss: reassign the dead shard's key range and
+        open units to the survivors (the control-plane analogue of store
+        ``failover``).  Requires the project's scheduler to be a
+        ``ShardedScheduler``."""
+        sched = self.projects[project].scheduler
+        if not hasattr(sched, "fail_shard"):
+            raise RuntimeError("fail_shard needs a sharded scheduler "
+                               "(ShardedScheduler); this project runs a "
+                               "single VolunteerScheduler")
+        return sched.fail_shard(index)
+
+    def scheduler_stats(self, project: str) -> Dict[str, int]:
+        """Aggregated scheduler counters (plus per-shard totals when the
+        project's scheduler is sharded)."""
+        return dict(self.projects[project].scheduler.stats)
 
     # ---- §IV-C capacity -----------------------------------------------
     def tasks_per_day_capacity(self, dispatch_us: float,

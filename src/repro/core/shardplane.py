@@ -1,0 +1,444 @@
+"""Sharded million-volunteer scheduler plane.
+
+The paper's server is ONE machine; BOINC already pushes such a machine to
+~8.8 M tasks/day, and V-BOINC predicts the server becomes the bottleneck
+once capsule transfer is layered on.  ``ShardedScheduler`` splits the
+control plane across N independent ``VolunteerScheduler`` shards while
+presenting the exact ``request_work``/``report``/``drain_completed``
+interface ``VBoincServer`` and ``VolunteerTrainer`` already speak.
+
+Data flow — key range → shard → watermark queue:
+
+1. **Key-range partitioning.**  The plane owns ``4*N`` contiguous
+   *range slots*.  A volunteer's sha256 account-key hash picks its slot;
+   ``_range_owner[slot]`` maps the slot to the shard that serves it (the
+   indirection is what makes failover a table edit, not a re-hash of the
+   fleet).  Work units stripe over the same slots by unit id, so each
+   shard owns a disjoint set of units and volunteers mostly talk to one
+   shard.
+2. **Watermark refill (pytest-xdist ``LoadScheduling`` model).**  Each
+   volunteer has a small local pending queue.  ``request_work`` pops from
+   it in O(1); when the queue drops below ``watermark`` the plane refills
+   a batch of ``refill_batch`` leases from the volunteer's home shard in
+   ONE index scan — the scan cost amortizes over the batch, which is what
+   keeps dispatch latency flat at millions of open units.
+3. **Work stealing.**  A volunteer whose home shard is dry steals a batch
+   from the *tail* of the largest open backlog among the other alive
+   shards (newest units first, so thieves collide least with the owner's
+   own head-first refills).  Only when every shard is dry does the
+   volunteer get the home shard's exponential back-off.
+4. **Batched quorum.**  ``report`` buffers results; ``flush_reports`` —
+   called at most once per trainer round (from ``done``/``pending``/
+   ``drain_completed``) or when the buffer hits ``report_batch_max`` —
+   groups them by shard and validates quorum once per touched unit
+   (``VolunteerScheduler.report_batch``) instead of once per result.
+5. **Shard failover.**  ``fail_shard(i)`` (driven by the seeded
+   ``ChurnSim``) deterministically reassigns the dead shard's range slots
+   to the survivors, migrates its open units (results and lease history
+   travel; leases drop and re-issue), merges its per-worker credit into
+   each worker's new home shard, and preserves its completed log — no
+   unit is lost, double-credited, or over-replicated across the move.
+   ``tests/test_shardplane.py`` proves this differentially against a
+   single-scheduler oracle under thousands of random interleavings.
+"""
+from __future__ import annotations
+
+import hashlib
+import time
+from collections import deque
+from typing import Deque, Dict, Iterator, List, Optional, Tuple
+
+from repro.core.scheduler import (SimClock, VolunteerScheduler, WorkerInfo,
+                                  WorkUnit)
+
+SLOTS_PER_SHARD = 4      # range slots per shard: granularity of failover
+
+
+def key_hash(worker_id: str) -> int:
+    """Stable account-key hash (sha256, like the server's account keys —
+    NOT Python's salted hash())."""
+    return int.from_bytes(
+        hashlib.sha256(worker_id.encode()).digest()[:8], "big")
+
+
+class _UnitsView:
+    """Read-only mapping over every shard's units, routed by the plane's
+    unit→shard index — lets trainer/server code written against
+    ``scheduler.units`` run unchanged."""
+
+    def __init__(self, plane: "ShardedScheduler"):
+        self._plane = plane
+
+    def get(self, unit_id: int, default=None) -> Optional[WorkUnit]:
+        sidx = self._plane._unit_shard.get(unit_id)
+        if sidx is None:
+            return default
+        return self._plane.shards[sidx].units.get(unit_id, default)
+
+    def __getitem__(self, unit_id: int) -> WorkUnit:
+        wu = self.get(unit_id)
+        if wu is None:
+            raise KeyError(unit_id)
+        return wu
+
+    def __contains__(self, unit_id: int) -> bool:
+        return self.get(unit_id) is not None
+
+    def __len__(self) -> int:
+        return sum(len(s.units) for s in self._plane.shards)
+
+    def __iter__(self) -> Iterator[int]:
+        for s in self._plane.shards:
+            yield from s.units
+
+    def items(self):
+        for s in self._plane.shards:
+            yield from s.units.items()
+
+    def values(self):
+        for s in self._plane.shards:
+            yield from s.units.values()
+
+
+class ShardedScheduler:
+    """N ``VolunteerScheduler`` shards behind the single-scheduler API."""
+
+    def __init__(self, *, shards: int = 4, replication: int = 1,
+                 quorum: int = 1, deadline_s: float = 60.0,
+                 backoff_base_s: float = 0.5, backoff_max_s: float = 60.0,
+                 straggler_factor: float = 0.8, max_extra_results: int = 4,
+                 clock=time.time, watermark: int = 2, refill_batch: int = 8,
+                 steal: bool = True, report_batch_max: int = 1024):
+        if shards < 1:
+            raise ValueError("need at least one shard")
+        self.n_shards = shards
+        self.replication = replication
+        self.quorum = quorum
+        self.deadline_s = deadline_s
+        self.backoff_base_s = backoff_base_s
+        self.backoff_max_s = backoff_max_s
+        self.clock = clock
+        self.watermark = watermark
+        self.refill_batch = max(refill_batch, 1)
+        self.steal = steal
+        self.report_batch_max = report_batch_max
+        self.shards = [VolunteerScheduler(
+            replication=replication, quorum=quorum, deadline_s=deadline_s,
+            backoff_base_s=backoff_base_s, backoff_max_s=backoff_max_s,
+            straggler_factor=straggler_factor,
+            max_extra_results=max_extra_results, clock=clock)
+            for _ in range(shards)]
+        self.n_slots = SLOTS_PER_SHARD * shards
+        # range slot -> owning shard; failover rewrites entries in place
+        self._range_owner: List[int] = [i % shards
+                                        for i in range(self.n_slots)]
+        self.shard_alive: List[bool] = [True] * shards
+        self._unit_shard: Dict[int, int] = {}      # unit -> current shard
+        self._home_cache: Dict[str, int] = {}      # worker -> slot
+        # per-volunteer low-watermark pending queue: (shard_idx, unit_id)
+        self._queues: Dict[str, Deque[Tuple[int, int]]] = {}
+        # buffered (worker, unit, hash) reports awaiting the round flush
+        self._report_buf: List[Tuple[str, int, str]] = []
+        # completion log preserved across shard failover migrations
+        self._migrated_completed: List[tuple[int, str]] = []
+        self.units = _UnitsView(self)
+        self.plane_stats = {"refills": 0, "refill_units": 0, "steals": 0,
+                            "steal_units": 0, "shard_kills": 0,
+                            "migrated_units": 0, "report_flushes": 0}
+
+    # ---------------- key-range routing ----------------
+    def slot_of(self, worker_id: str) -> int:
+        slot = self._home_cache.get(worker_id)
+        if slot is None:
+            slot = key_hash(worker_id) % self.n_slots
+            self._home_cache[worker_id] = slot
+        return slot
+
+    def home_shard(self, worker_id: str) -> int:
+        return self._range_owner[self.slot_of(worker_id)]
+
+    def unit_slot(self, unit_id: int) -> int:
+        return unit_id % self.n_slots
+
+    # ---------------- membership (elastic) ----------------
+    def join(self, worker_id: str) -> WorkerInfo:
+        return self.shards[self.home_shard(worker_id)].join(worker_id)
+
+    def leave(self, worker_id: str) -> None:
+        # the worker may hold leases on foreign shards (stealing): drop
+        # them everywhere it has state
+        for s in self.shards:
+            if worker_id in s.workers or worker_id in s._worker_leases:
+                s.leave(worker_id)
+        self._queues.pop(worker_id, None)
+
+    # ---------------- unit lifecycle ----------------
+    def submit(self, unit_id: int, payload: dict, *,
+               replication: Optional[int] = None,
+               quorum: Optional[int] = None) -> WorkUnit:
+        prev = self._unit_shard.get(unit_id)
+        sidx = self._range_owner[self.unit_slot(unit_id)]
+        if prev is not None and prev != sidx:
+            wu_prev = self.shards[prev].units.get(unit_id)
+            if wu_prev is not None and not wu_prev.completed:
+                # resubmit of a unit that migrated to a non-home shard:
+                # keep it where it lives so the open entry is reused
+                sidx = prev
+        self._unit_shard[unit_id] = sidx
+        return self.shards[sidx].submit(unit_id, payload,
+                                        replication=replication,
+                                        quorum=quorum)
+
+    # ---------------- dispatch: watermark queue + stealing -------------
+    def _valid_entry(self, worker_id: str, sidx: int, unit_id: int) -> bool:
+        # a queued lease may have expired/migrated/completed since refill
+        if self._unit_shard.get(unit_id) != sidx:
+            return False
+        wu = self.shards[sidx].units.get(unit_id)
+        return (wu is not None and not wu.completed
+                and worker_id in wu.leases)
+
+    def _refill(self, worker_id: str, q: Deque[Tuple[int, int]],
+                now: float) -> None:
+        want = self.watermark + self.refill_batch - len(q)
+        home = self.home_shard(worker_id)
+        got = self.shards[home].request_batch(worker_id, want)
+        if got:
+            self.plane_stats["refills"] += 1
+            self.plane_stats["refill_units"] += len(got)
+            q.extend((home, wu.unit_id) for wu in got)
+            return
+        if not self.steal:
+            return
+        # home is dry: steal from the largest open backlog, at the tail
+        victim, backlog = -1, 0
+        for i, s in enumerate(self.shards):
+            if i != home and self.shard_alive[i] and s.open_backlog() > backlog:
+                victim, backlog = i, s.open_backlog()
+        if victim < 0:
+            return
+        got = self.shards[victim].request_batch(worker_id, want, tail=True)
+        if got:
+            self.plane_stats["steals"] += 1
+            self.plane_stats["steal_units"] += len(got)
+            q.extend((victim, wu.unit_id) for wu in got)
+
+    def request_work(self, worker_id: str) -> Optional[WorkUnit]:
+        """O(1) pop from the volunteer's watermark queue; batch refill
+        (then steal) only when the queue runs low."""
+        now = self.clock()
+        home = self.shards[self.home_shard(worker_id)]
+        info = home.join(worker_id)
+        if now < info.backoff_until:
+            home.stats["rejected_requests"] += 1
+            return None
+        q = self._queues.setdefault(worker_id, deque())
+        if len(q) < self.watermark:
+            self._refill(worker_id, q, now)
+        while q:
+            sidx, unit_id = q.popleft()
+            if self._valid_entry(worker_id, sidx, unit_id):
+                return self.shards[sidx].units[unit_id]
+        # every refill source is dry: exponential back-off on the home
+        # shard (only a successful dispatch resets it)
+        home.backoff(worker_id, now)
+        return None
+
+    # ---------------- results: per-round batched quorum ----------------
+    def report(self, worker_id: str, unit_id: int, result_hash: str) -> bool:
+        """Buffer the result; quorum validates at the next round flush.
+
+        -> True only when this call's flush completed the unit (callers
+        needing completion should watch ``drain_completed``, as the
+        trainer already does)."""
+        self._report_buf.append((worker_id, unit_id, result_hash))
+        if len(self._report_buf) >= self.report_batch_max:
+            done = self.flush_reports()
+            return any(uid == unit_id for uid, _ in done)
+        return False
+
+    def flush_reports(self) -> List[tuple[int, str]]:
+        """Apply buffered results grouped by shard, one quorum check per
+        touched unit per shard (``report_batch``)."""
+        if not self._report_buf:
+            return []
+        buf, self._report_buf = self._report_buf, []
+        by_shard: Dict[int, List[Tuple[str, int, str]]] = {}
+        for worker_id, unit_id, h in buf:
+            sidx = self._unit_shard.get(unit_id)
+            if sidx is None:
+                continue               # unknown unit: drop silently
+            by_shard.setdefault(sidx, []).append((worker_id, unit_id, h))
+        done: List[tuple[int, str]] = []
+        for sidx, reports in by_shard.items():
+            done.extend(self.shards[sidx].report_batch(reports))
+        self.plane_stats["report_flushes"] += 1
+        return done
+
+    # ---------------- progress ----------------
+    def open_backlog(self) -> int:
+        return sum(s.open_backlog() for s in self.shards)
+
+    def done(self) -> bool:
+        self.flush_reports()
+        return self.open_backlog() == 0
+
+    def pending(self) -> List[WorkUnit]:
+        self.flush_reports()
+        out: List[WorkUnit] = []
+        for s in self.shards:
+            out.extend(s.pending())
+        return out
+
+    def drain_completed(self) -> List[tuple[int, str]]:
+        self.flush_reports()
+        out = self._migrated_completed
+        self._migrated_completed = []
+        for s in self.shards:
+            out.extend(s.drain_completed())
+        return out
+
+    def canonical_results(self) -> Dict[int, str]:
+        out: Dict[int, str] = {}
+        for s in self.shards:
+            out.update(s.canonical_results())
+        return out
+
+    def _expire_leases(self, now: float) -> None:
+        for i, s in enumerate(self.shards):
+            if self.shard_alive[i]:
+                s._expire_leases(now)
+
+    # ---------------- credit ----------------
+    def credit_transfer(self, worker_id: str, moved_bytes: int,
+                        dedup_bytes: int = 0) -> None:
+        self.shards[self.home_shard(worker_id)].credit_transfer(
+            worker_id, moved_bytes, dedup_bytes)
+
+    @property
+    def workers(self) -> Dict[str, WorkerInfo]:
+        """Merged per-worker view (a worker that stole work has state on
+        several shards); credit/counters sum, alive ORs."""
+        merged: Dict[str, WorkerInfo] = {}
+        for s in self.shards:
+            for wid, info in s.workers.items():
+                m = merged.get(wid)
+                if m is None:
+                    merged[wid] = m = WorkerInfo(wid, info.joined)
+                    m.alive = False
+                m.credit += info.credit
+                m.completed += info.completed
+                m.invalid += info.invalid
+                m.uplink_bytes += info.uplink_bytes
+                m.uplink_dedup += info.uplink_dedup
+                m.alive = m.alive or info.alive
+                m.backoff_until = max(m.backoff_until, info.backoff_until)
+        return merged
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        agg: Dict[str, int] = {}
+        for s in self.shards:
+            for k, v in s.stats.items():
+                agg[k] = agg.get(k, 0) + v
+        agg.update(self.plane_stats)
+        agg["shards"] = self.n_shards
+        agg["shards_alive"] = sum(self.shard_alive)
+        return agg
+
+    # ---------------- failover ----------------
+    def alive_shards(self) -> List[int]:
+        return [i for i, a in enumerate(self.shard_alive) if a]
+
+    def fail_shard(self, index: int) -> Dict[str, int]:
+        """Kill shard ``index``: deterministically reassign its key-range
+        slots to the survivors and migrate its state.
+
+        * open units move to the new owner of their range slot — results,
+          lease history (``ever_leased``) and escalation counters travel,
+          live leases drop (counted) and re-issue on the target;
+        * completed units copy over so late reports and credit settling
+          still see them; the un-drained completion log is preserved;
+        * per-worker credit/counters merge into each worker's *new* home
+          shard — total minted credit is conserved.
+
+        -> migration summary dict."""
+        if not self.shard_alive[index]:
+            raise ValueError(f"shard {index} is already down")
+        survivors = [i for i in self.alive_shards() if i != index]
+        if not survivors:
+            raise ValueError("cannot kill the last alive shard")
+        # drain the report inbox first: buffered results must apply where
+        # their workers are joined, or their credit share would vanish
+        # when the unit completes on a shard that never saw the worker
+        self.flush_reports()
+        self.shard_alive[index] = False
+        self.plane_stats["shard_kills"] += 1
+        # deterministic slot reassignment: slot -> survivor round-robin
+        for slot in range(self.n_slots):
+            if self._range_owner[slot] == index:
+                self._range_owner[slot] = survivors[slot % len(survivors)]
+        dead = self.shards[index]
+        # preserve completions that were not yet drained
+        self._migrated_completed.extend(dead.drain_completed())
+        moved_open = moved_done = dropped = 0
+        for unit_id, wu in dead.units.items():
+            target_idx = self._range_owner[self.unit_slot(unit_id)]
+            target = self.shards[target_idx]
+            self._unit_shard[unit_id] = target_idx
+            if wu.completed:
+                target.units[unit_id] = wu
+                moved_done += 1
+                continue
+            dropped += len(wu.leases)
+            dead.stats["dropped_leases"] += len(wu.leases)
+            wu.leases.clear()          # heap/mirror entries go stale
+            wu.straggler_issued = False
+            target.units[unit_id] = wu
+            target._open.append(unit_id)
+            target._n_open += 1
+            moved_open += 1
+            # every worker in the unit's lease history needs a ledger slot
+            # on the target, or completion there would drop their credit
+            # (a late report from a pre-kill lease holder is still valid)
+            for wid in wu.ever_leased:
+                if wid not in target.workers:
+                    src = dead.workers.get(wid)
+                    ghost = WorkerInfo(wid, src.joined if src else 0.0)
+                    ghost.alive = src.alive if src else False
+                    target.workers[wid] = ghost
+        # merge volunteer accounting into each worker's new home shard
+        for wid, info in dead.workers.items():
+            home = self.shards[self.home_shard(wid)]
+            m = home.workers.get(wid)
+            if m is None or not m.alive:
+                m = home.join(wid) if info.alive else \
+                    home.workers.setdefault(wid, WorkerInfo(wid, info.joined))
+                m.alive = info.alive
+            m.credit += info.credit
+            m.completed += info.completed
+            m.invalid += info.invalid
+            m.uplink_bytes += info.uplink_bytes
+            m.uplink_dedup += info.uplink_dedup
+            m.backoff_until = max(m.backoff_until, info.backoff_until)
+            m.backoff_k = max(m.backoff_k, info.backoff_k)
+        # retire the dead shard's state so aggregate stats don't double
+        # count workers and the view classes skip it
+        dead.units = {}
+        dead._open.clear()
+        dead._open_stale = 0
+        dead._n_open = 0
+        dead._lease_heap.clear()
+        dead._worker_leases.clear()
+        dead.workers = {}
+        self.plane_stats["migrated_units"] += moved_open
+        return {"reassigned_open": moved_open, "copied_completed": moved_done,
+                "dropped_leases": dropped}
+
+    def shard_report(self) -> List[Dict[str, int]]:
+        """Per-shard load view (benchmarks / ops)."""
+        return [{"shard": i, "alive": int(self.shard_alive[i]),
+                 "open": s.open_backlog(), "workers": len(s.workers),
+                 "dispatched": s.stats["dispatched"],
+                 "completed": s.stats["completed"]}
+                for i, s in enumerate(self.shards)]

@@ -6,6 +6,13 @@ delivery, and faults (kill/wipe/revive/promote, message drops, reordered
 delivery) — with every random choice drawn from one seeded generator, so
 a failing schedule replays bit-for-bit from its seed.
 
+The same driver also churns the *scheduler plane*: constructed with
+``shards=`` (a ``ShardedScheduler``) it kills scheduler shards —
+scripted (``kill_shard``) or seeded (``random_shard_kill``) — so the
+shard-failover path (key-range reassignment + open-unit migration) is
+exercised by the exact deterministic machinery that already drives
+replica failover.  A sim may drive replicas, shards, or both.
+
 Two instruments make the fault-injection suite's assertions possible:
 
 * **message interception** — the sim installs itself as the set's
@@ -32,8 +39,12 @@ from repro.core.replica import ReplicaSet
 class ChurnSim:
     """Scripted, seedable kill/revive/drop/reorder driver for a ReplicaSet."""
 
-    def __init__(self, replicas: ReplicaSet, seed: int = 0):
+    def __init__(self, replicas: Optional[ReplicaSet] = None, seed: int = 0,
+                 *, shards=None):
+        if replicas is None and shards is None:
+            raise ValueError("ChurnSim needs replicas= and/or shards=")
         self.replicas = replicas
+        self.shards = shards           # a ShardedScheduler (or None)
         self.rng = np.random.default_rng(seed)
         self.step = 0
         self.phase = "idle"
@@ -42,8 +53,9 @@ class ChurnSim:
         self.events: List[tuple[int, str, object]] = []
         # (step, phase, member, primary_index at log time, record count)
         self.ingest_log: List[tuple[int, str, int, int, int]] = []
-        replicas.transport = self._transport
-        self._instrument()
+        if replicas is not None:
+            replicas.transport = self._transport
+            self._instrument()
 
     # -- instrumentation ---------------------------------------------------
     def _instrument(self) -> None:
@@ -77,6 +89,12 @@ class ChurnSim:
         self.step += 1
         self.phase = phase
 
+    def _need_replicas(self) -> ReplicaSet:
+        if self.replicas is None:
+            raise RuntimeError("this step needs replicas=; the sim was "
+                               "built to drive scheduler shards only")
+        return self.replicas
+
     # -- scripted steps ----------------------------------------------------
     def hot(self, fn: Callable[[], object]):
         """Run snapshot/training work as a hot-path step; any peer I/O in
@@ -88,6 +106,7 @@ class ChurnSim:
             self.phase = "idle"
 
     def pump(self, max_msgs: Optional[int] = None) -> int:
+        self._need_replicas()
         self._tick("net")
         try:
             return self.replicas.pump(max_msgs)
@@ -98,6 +117,7 @@ class ChurnSim:
         """Deliver captured in-flight messages, scrambled (seeded) when
         ``shuffle`` — the reorder fault.  Chain-closure messages are
         self-contained, so any order must converge."""
+        self._need_replicas()
         self._tick("net")
         try:
             msgs, self.in_flight = self.in_flight, []
@@ -120,6 +140,7 @@ class ChurnSim:
 
     def kill(self, index: int, wipe: bool = False) -> None:
         """Mark a member down; ``wipe`` simulates full disk loss."""
+        self._need_replicas()
         self._tick("fault")
         self.replicas.mark_down(index)
         if wipe:
@@ -128,6 +149,7 @@ class ChurnSim:
         self.phase = "idle"
 
     def revive(self, index: int, sync: bool = False) -> None:
+        self._need_replicas()
         self._tick("fault")
         self.replicas.mark_up(index)
         self._log("revive", index)
@@ -138,6 +160,7 @@ class ChurnSim:
             self.deliver(shuffle=False)
 
     def promote(self, index: Optional[int] = None) -> int:
+        self._need_replicas()
         self._tick("fault")
         if index is None:
             index = self.replicas.promote_best()
@@ -145,6 +168,30 @@ class ChurnSim:
             self.replicas.promote(index)
         self._log("promote", index)
         self.phase = "idle"
+        return index
+
+    # -- scheduler-shard churn --------------------------------------------
+    def kill_shard(self, index: int) -> Dict[str, int]:
+        """Kill scheduler shard ``index``: its key range and open units
+        reassign deterministically to the survivors (fail_shard)."""
+        if self.shards is None:
+            raise RuntimeError("sim was built without shards=")
+        self._tick("fault")
+        info = self.shards.fail_shard(index)
+        self._log("kill_shard", (index, info))
+        self.phase = "idle"
+        return info
+
+    def random_shard_kill(self) -> Optional[int]:
+        """Kill a seeded-random alive shard (never the last one); -> the
+        killed index, or None when only one shard survives."""
+        if self.shards is None:
+            raise RuntimeError("sim was built without shards=")
+        alive = self.shards.alive_shards()
+        if len(alive) < 2:
+            return None
+        index = int(alive[self.rng.integers(len(alive))])
+        self.kill_shard(index)
         return index
 
     def settle(self, max_rounds: int = 32) -> None:

@@ -65,6 +65,17 @@ def main(argv=None) -> dict:
     ap.add_argument("--corrupt-prob", type=float, default=0.0)
     ap.add_argument("--replication", type=int, default=1)
     ap.add_argument("--quorum", type=int, default=1)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the scheduler plane by account-key range "
+                         "across N VolunteerScheduler shards (watermark "
+                         "refill + work stealing; dispatch stays O(1) as "
+                         "the fleet grows)")
+    ap.add_argument("--watermark", type=int, default=2,
+                    help="per-volunteer pending-queue low watermark "
+                         "(sharded plane only)")
+    ap.add_argument("--refill-batch", type=int, default=8,
+                    help="leases pulled per watermark refill scan "
+                         "(sharded plane only)")
     ap.add_argument("--snapshot-every", type=int, default=10)
     ap.add_argument("--compress-grads", action="store_true",
                     help="int8+error-feedback gradient compression (4x "
@@ -128,9 +139,18 @@ def main(argv=None) -> dict:
     snaps = SnapshotManager(store, root=root / "snaps" if root else None,
                             keep_last=3, async_mode=args.async_writer,
                             writer_depth=args.writer_depth)
-    sched = VolunteerScheduler(replication=args.replication,
-                               quorum=args.quorum, deadline_s=30.0,
-                               clock=SimClock())
+    if args.shards > 1:
+        from repro.core.shardplane import ShardedScheduler
+        sched = ShardedScheduler(shards=args.shards,
+                                 replication=args.replication,
+                                 quorum=args.quorum, deadline_s=30.0,
+                                 watermark=args.watermark,
+                                 refill_batch=args.refill_batch,
+                                 clock=SimClock())
+    else:
+        sched = VolunteerScheduler(replication=args.replication,
+                                   quorum=args.quorum, deadline_s=30.0,
+                                   clock=SimClock())
     state = api.TrainState(init_tree(specs.params, jax.random.key(args.seed)),
                            init_tree(specs.opt, jax.random.key(args.seed)))
 
@@ -208,6 +228,8 @@ def main(argv=None) -> dict:
         "snapshot_stall_ms": round(sum(
             h.snapshot_stall_ms for h in trainer.history), 2),
     }
+    if args.shards > 1:
+        summary["shard_plane"] = sched.shard_report()
     if args.async_writer:
         summary["snapshot_writer"] = {
             k: round(v, 2) if isinstance(v, float) else v

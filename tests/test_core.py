@@ -247,6 +247,100 @@ def test_worker_leave_drops_leases():
     assert s.request_work("w2").unit_id == 0      # immediately available
 
 
+def test_submit_explicit_overrides_are_honored():
+    # regression: `replication or self.replication` silently replaced any
+    # falsy explicit value with the scheduler default — submit(quorum=0)
+    # became quorum=3 and the misconfiguration never surfaced
+    s = VolunteerScheduler(replication=3, quorum=2, clock=SimClock())
+    wu = s.submit(0, {}, replication=1, quorum=1)
+    assert wu.replication == 1 and wu.quorum == 1
+    s.join("w")
+    s.request_work("w")
+    assert s.report("w", 0, "H")                  # one result completes it
+    with pytest.raises(ValueError):
+        s.submit(1, {}, replication=0)
+    with pytest.raises(ValueError):
+        s.submit(1, {}, quorum=0)
+    with pytest.raises(ValueError):
+        s.submit(1, {}, replication=1, quorum=2)  # quorum > replication
+
+
+def test_unsolicited_report_rejected():
+    clock = SimClock()
+    s = VolunteerScheduler(replication=2, quorum=2, clock=clock)
+    s.submit(0, {})
+    for w in ("a", "b"):
+        s.join(w)
+        assert s.request_work(w) is not None
+    s.join("forger")                              # never held a lease
+    assert not s.report("forger", 0, "EVIL")
+    assert s.stats["unsolicited_results"] == 1
+    assert "forger" not in s.units[0].results     # can't poison quorum
+    s.report("a", 0, "GOOD")
+    assert s.report("b", 0, "GOOD")
+    assert s.units[0].canonical == "GOOD"
+    assert s.workers["forger"].credit == 0.0
+
+
+def test_straggler_duplicate_once_per_lease_lifetime():
+    clock = SimClock()
+    s = VolunteerScheduler(deadline_s=10.0, straggler_factor=0.5,
+                           clock=clock)
+    s.submit(0, {})
+    for w in ("slow", "fast", "w3", "w4", "w5"):
+        s.join(w)
+    assert s.request_work("slow") is not None
+    clock.advance(6.0)                            # > 0.5 * deadline
+    assert s.request_work("fast").unit_id == 0    # the one duplicate
+    assert s.stats["duplicates"] == 1
+    # same lease lifetime: no further fan-out to other volunteers
+    assert s.request_work("w3") is None
+    clock.advance(11.0)                           # both leases expire
+    assert s.request_work("w4").unit_id == 0      # fresh lease lifetime
+    clock.advance(6.0)
+    assert s.request_work("w5").unit_id == 0      # straggler re-armed
+    assert s.stats["duplicates"] == 2
+
+
+def test_backoff_resets_only_on_successful_dispatch():
+    clock = SimClock()
+    s = VolunteerScheduler(backoff_base_s=1.0, backoff_max_s=64.0,
+                           clock=clock)
+    s.join("w")
+    assert s.request_work("w") is None            # no work -> k = 1
+    assert s.workers["w"].backoff_k == 1
+    assert s.request_work("w") is None            # rejected inside window:
+    assert s.workers["w"].backoff_k == 1          # k must NOT move
+    clock.advance(100.0)
+    assert s.request_work("w") is None            # still no work -> k = 2
+    assert s.workers["w"].backoff_k == 2
+    s.submit(0, {})
+    clock.advance(100.0)
+    assert s.request_work("w") is not None        # success resets fully
+    assert s.workers["w"].backoff_k == 0
+    assert s.workers["w"].backoff_until == 0.0
+
+
+def test_lease_expiry_across_clock_jump():
+    # one large SimClock jump must expire every due lease in a single
+    # call (heap pops), not just the first one found by a scan
+    clock = SimClock()
+    s = VolunteerScheduler(deadline_s=10.0, clock=clock)
+    for uid in range(3):
+        s.submit(uid, {})
+    for i, w in enumerate(("a", "b", "c")):
+        s.join(w)
+        assert s.request_work(w) is not None
+        clock.advance(2.0)                        # staggered deadlines
+    clock.advance(50.0)                           # jump past all of them
+    s.join("fresh")
+    got = s.request_work("fresh")
+    assert got is not None
+    assert s.stats["reissued"] == 3
+    for uid in range(3):
+        assert list(s.units[uid].leases) in ([], ["fresh"])
+
+
 # ---------------------------------------------------------------------------
 # server + capsule
 # ---------------------------------------------------------------------------

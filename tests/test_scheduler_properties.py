@@ -1,0 +1,176 @@
+"""Property-based scheduler-invariant tests (hypothesis).
+
+Under arbitrary interleavings of submit / request / report (honest or
+corrupt) / leave / join / clock-advance / credit_transfer, the volunteer
+scheduler must conserve its ledger:
+
+* every submitted unit completes **exactly once** — the drain log never
+  repeats a unit, and nothing is lost once a quorum of honest finishers
+  works the backlog down;
+* a unit never holds more than ``replication + max_extra_results``
+  results (the replica-escalation cap);
+* total minted credit equals completed units plus the MiB moved through
+  ``credit_transfer`` — no interleaving mints or destroys credit.
+
+Corrupt results use unique hashes and are capped per unit at
+``replication + max_extra_results - quorum`` so a unit always retains
+enough result slots for an honest quorum; without the cap an adversary
+could legitimately exhaust a unit's slots (BOINC's max_error_results
+marks such units as errors — this scheduler keeps them open forever,
+which would be a different invariant).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.scheduler import SimClock, VolunteerScheduler
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+OP = st.one_of(
+    st.tuples(st.just("submit"), st.integers(1, 4)),
+    st.tuples(st.just("join"), st.just(0)),
+    st.tuples(st.just("request"), st.integers(0, 7)),
+    st.tuples(st.just("report"), st.integers(0, 7), st.booleans()),
+    st.tuples(st.just("leave"), st.integers(0, 7)),
+    st.tuples(st.just("advance"), st.integers(1, 240)),
+    st.tuples(st.just("transfer"), st.integers(0, 7), st.integers(1, 8)),
+)
+
+
+def drive(ops, rep, quo):
+    """Run one op sequence; assert every invariant along the way and
+    after an honest drain."""
+    clock = SimClock()
+    s = VolunteerScheduler(replication=rep, quorum=quo, deadline_s=20.0,
+                           backoff_base_s=0.5, backoff_max_s=8.0,
+                           clock=clock)
+    next_uid, next_wid, bad = 0, 0, 0
+    alive, everyone = [], []
+    outstanding = []                 # (worker, unit) leases granted to us
+    corrupt_count = {}               # unit -> diverging results recorded
+    corrupt_cap = rep + s.max_extra_results - quo
+    transferred_mib = 0.0
+    drained = []
+
+    def spawn():
+        nonlocal next_wid
+        w = f"w{next_wid}"           # ids are never reused: rejoining a
+        next_wid += 1                # dead worker resets its credit (by
+        s.join(w)                    # design), which would break the
+        alive.append(w)              # conservation ledger below
+        everyone.append(w)
+        return w
+
+    spawn()
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            for _ in range(op[1]):
+                s.submit(next_uid, {"i": next_uid})
+                corrupt_count[next_uid] = 0
+                next_uid += 1
+        elif kind == "join":
+            spawn()
+        elif kind == "request" and alive:
+            w = alive[op[1] % len(alive)]
+            wu = s.request_work(w)
+            if wu is not None:
+                outstanding.append((w, wu.unit_id))
+        elif kind == "report" and outstanding:
+            w, uid = outstanding.pop(op[1] % len(outstanding))
+            if op[2] and corrupt_count[uid] < corrupt_cap:
+                bad += 1
+                corrupt_count[uid] += 1
+                s.report(w, uid, f"bad-{bad}")
+            else:
+                s.report(w, uid, f"h{uid}")
+        elif kind == "leave" and len(alive) > 1:
+            w = alive.pop(op[1] % len(alive))
+            s.leave(w)
+        elif kind == "advance":
+            clock.advance(op[1] / 2.0)
+        elif kind == "transfer" and everyone:
+            w = everyone[op[1] % len(everyone)]
+            s.credit_transfer(w, op[2] << 18)     # op[2]/4 MiB
+            transferred_mib += op[2] / 4.0
+        drained.extend(s.drain_completed())
+        for wu in s.units.values():               # escalation cap, always
+            assert len(wu.results) <= wu.replication + wu.max_extra_results
+
+    # work the backlog down with a quorum of honest finishers
+    finishers = [spawn() for _ in range(quo)]
+    for _ in range(4 * max(1, s.open_backlog()) * (quo + rep) + 40):
+        if s.done():
+            break
+        for w in finishers:
+            wu = s.request_work(w)
+            if wu is not None:
+                s.report(w, wu.unit_id, f"h{wu.unit_id}")
+        clock.advance(40.0)     # clears back-off, expires stale leases
+        drained.extend(s.drain_completed())
+    assert s.done(), f"backlog never drained: {s.open_backlog()} open"
+
+    drained.extend(s.drain_completed())
+    done_ids = [uid for uid, _ in drained]
+    assert len(done_ids) == len(set(done_ids))    # at most once
+    assert set(done_ids) == set(range(next_uid))  # and nothing lost
+    for wu in s.units.values():
+        assert wu.completed
+        assert len(wu.results) <= wu.replication + wu.max_extra_results
+    total_credit = sum(i.credit for i in s.workers.values())
+    assert total_credit == pytest.approx(next_uid + transferred_mib)
+    return s
+
+
+@settings(**SETTINGS)
+@given(ops=st.lists(OP, max_size=150),
+       repq=st.sampled_from([(1, 1), (2, 1), (2, 2), (3, 2), (3, 3)]))
+def test_scheduler_conserves_its_ledger(ops, repq):
+    drive(ops, *repq)
+
+
+@settings(**SETTINGS)
+@given(ops=st.lists(OP, max_size=80))
+def test_forged_reports_never_complete_or_mint(ops):
+    """Interleave every op with a forged report from a worker that never
+    held a lease: completions, results and credit must be exactly what
+    the honest run produces — plus one rejection counted per forgery."""
+    clock = SimClock()
+    s = VolunteerScheduler(replication=2, quorum=2, deadline_s=20.0,
+                           clock=clock)
+    s.join("a")
+    s.join("b")
+    forged = 0
+    next_uid = 0
+    outstanding = []
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            for _ in range(op[1]):
+                s.submit(next_uid, {})
+                next_uid += 1
+        elif kind == "request":
+            w = ("a", "b")[op[1] % 2]
+            wu = s.request_work(w)
+            if wu is not None:
+                outstanding.append((w, wu.unit_id))
+        elif kind == "report" and outstanding:
+            w, uid = outstanding.pop(op[1] % len(outstanding))
+            s.report(w, uid, f"h{uid}")
+        elif kind == "advance":
+            clock.advance(op[1] / 2.0)
+        # the attack: a free-rider reports on every open unit it can see
+        for wu in list(s.units.values()):
+            if not wu.completed:
+                assert not s.report("freerider", wu.unit_id, f"h{wu.unit_id}")
+                forged += 1
+    assert s.stats["unsolicited_results"] == forged
+    assert s.workers.get("freerider") is None or \
+        s.workers["freerider"].credit == 0.0
+    for wu in s.units.values():
+        assert "freerider" not in wu.results
+    total_credit = sum(i.credit for i in s.workers.values())
+    assert total_credit == pytest.approx(s.stats["completed"])
