@@ -12,6 +12,14 @@ Dispatches on the ``kind`` field of the current-run JSON:
   an unchanged state, so their stall is pure probe overhead at
   microsecond scale and 25% of it is below timer noise.
 
+* **telemetry** (``kind: "telemetry"``, from ``telemetry_overhead
+  --json``) — compares against ``benchmarks/BENCH_telemetry.json``.  The
+  load-bearing check is ``overhead_ratio``: tracing-enabled dispatch p50
+  must stay within ``--overhead-limit`` (default 3.0) of tracing-disabled,
+  computed *within* one run.  The disabled-path p50 also gates loosely
+  against the baseline (doubled tolerance + ``--floor-us``) — that row is
+  what the scheduler flat-ratio gate implicitly rides on.
+
 * **scheduler** (``kind: "scheduler"``, from ``server_throughput
   --json``) — compares against ``benchmarks/BENCH_scheduler.json``.  The
   load-bearing check is ``flat_ratio``: p50 dispatch at the largest
@@ -38,6 +46,7 @@ from pathlib import Path
 
 BASELINE = Path(__file__).parent / "BENCH_table2.json"
 SCHED_BASELINE = Path(__file__).parent / "BENCH_scheduler.json"
+TELEMETRY_BASELINE = Path(__file__).parent / "BENCH_telemetry.json"
 
 # rows where the stall is real work being hidden (the zero-stall claim);
 # frozen workloads stall for ~nothing in both modes and only add noise
@@ -101,6 +110,42 @@ def check_scheduler(current: dict, baseline: dict, tolerance: float,
     return failures
 
 
+def check_telemetry(current: dict, baseline: dict, tolerance: float,
+                    floor_us: float, overhead_limit: float) -> list[str]:
+    """-> list of human-readable failures (empty = pass)."""
+    failures = []
+    ratio = current.get("overhead_ratio")
+    if ratio is None:
+        failures.append("overhead_ratio missing from run")
+    else:
+        verdict = "FAIL" if ratio > overhead_limit else "ok"
+        print(f"  overhead_ratio enabled/disabled = {ratio:.2f}  "
+              f"(limit {overhead_limit:.2f})  {verdict}")
+        if ratio > overhead_limit:
+            failures.append(f"overhead_ratio {ratio:.2f} > "
+                            f"{overhead_limit:.2f}: tracing is no longer "
+                            f"cheap on the dispatch hot path")
+    cur = {r["name"]: r for r in current["rows"]}
+    base = {r["name"]: r for r in baseline["rows"]}
+    # only the disabled path gates vs the baseline: it is the default
+    # configuration every other benchmark (and the flat-ratio gate) runs in
+    for name in ("disabled",):
+        if name not in base:
+            continue
+        if name not in cur:
+            failures.append(f"{name}: row missing from current run")
+            continue
+        bv, cv = float(base[name]["p50_us"]), float(cur[name]["p50_us"])
+        limit = bv * (1.0 + 2.0 * tolerance) + floor_us
+        verdict = "FAIL" if cv > limit else "ok"
+        print(f"  {name:9s} p50_us {bv:8.2f} -> {cv:8.2f}  "
+              f"(limit {limit:.2f})  {verdict}")
+        if cv > limit:
+            failures.append(f"{name}: p50_us {cv:.2f} > limit {limit:.2f} "
+                            f"(baseline {bv:.2f})")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="JSON from table2_snapshots --json or "
@@ -116,12 +161,21 @@ def main(argv=None) -> int:
                     help="absolute per-row slack for scheduler p50 gating")
     ap.add_argument("--flat-limit", type=float, default=2.0,
                     help="max allowed scheduler flat_ratio (O(1) dispatch)")
+    ap.add_argument("--overhead-limit", type=float, default=3.0,
+                    help="max allowed telemetry enabled/disabled p50 ratio")
     args = ap.parse_args(argv)
     current = json.loads(Path(args.current).read_text())
     kind = current.get("kind", "stall")
-    default_base = SCHED_BASELINE if kind == "scheduler" else BASELINE
+    default_base = {"scheduler": SCHED_BASELINE,
+                    "telemetry": TELEMETRY_BASELINE}.get(kind, BASELINE)
     baseline = json.loads(Path(args.baseline or default_base).read_text())
-    if kind == "scheduler":
+    if kind == "telemetry":
+        print(f"telemetry overhead gate (overhead_limit "
+              f"{args.overhead_limit:.2f}, tolerance "
+              f"+{2 * args.tolerance:.0%}, floor {args.floor_us}us):")
+        failures = check_telemetry(current, baseline, args.tolerance,
+                                   args.floor_us, args.overhead_limit)
+    elif kind == "scheduler":
         print(f"scheduler dispatch gate (flat_limit {args.flat_limit:.2f}, "
               f"tolerance +{2 * args.tolerance:.0%}, "
               f"floor {args.floor_us}us):")

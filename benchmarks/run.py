@@ -12,7 +12,7 @@ import time
 def main() -> None:
     from benchmarks import (fig3_overhead, fig4_sprint_pcor,
                             replica_failover, roofline, server_throughput,
-                            table2_snapshots)
+                            table2_snapshots, telemetry_overhead)
 
     sections = [
         ("fig3 (benchmark overhead, 4 platforms)", fig3_overhead.run),
@@ -21,6 +21,7 @@ def main() -> None:
         ("server (§IV-C throughput)", server_throughput.run),
         ("replica (fan-out + failover)", replica_failover.run),
         ("roofline (dry-run derived)", roofline.run),
+        ("telemetry (tracing overhead)", telemetry_overhead.run),
     ]
     print("name,us_per_call,derived")
     ok = True

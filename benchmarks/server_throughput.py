@@ -156,6 +156,10 @@ def main(argv=None) -> int:
                     help="request_work samples per row")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the machine-readable curve here")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "run's metrics registry (per-shard dispatch "
+                         "counters, flush-batch histograms) here")
     args = ap.parse_args(argv)
     curve = scaling_curve(tiny=args.tiny, samples=args.samples)
     for r in curve["rows"]:
@@ -168,6 +172,10 @@ def main(argv=None) -> int:
     if args.json:
         Path(args.json).write_text(json.dumps(curve, indent=2))
         print(f"wrote {args.json}")
+    if args.telemetry:
+        from repro.core import telemetry as tlm
+        Path(args.telemetry).write_text(tlm.get_default().prometheus())
+        print(f"wrote {args.telemetry}")
     return 0
 
 

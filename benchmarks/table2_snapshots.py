@@ -260,6 +260,10 @@ def main(argv=None) -> None:
                     help="smallest config (CI benchmark smoke)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows as JSON (CI artifact)")
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write the Prometheus text exposition of the "
+                         "run's metrics registry (chunk-store put/dedup "
+                         "counters, writer stall accumulators) here")
     args = ap.parse_args(argv)
     if args.rounds < 1:
         ap.error("--rounds must be >= 1")
@@ -269,6 +273,9 @@ def main(argv=None) -> None:
         with open(args.json, "w") as f:
             json.dump({"bench": "table2_snapshots", "rounds": args.rounds,
                        "tiny": args.tiny, "rows": rows}, f, indent=2)
+    if args.telemetry:
+        from repro.core import telemetry as tlm
+        Path(args.telemetry).write_text(tlm.get_default().prometheus())
 
 
 if __name__ == "__main__":

@@ -36,6 +36,8 @@ from dataclasses import dataclass, field
 from pathlib import Path
 from typing import Dict, Iterable, List, Optional
 
+from repro.core import telemetry as tlm
+
 import numpy as np
 
 DEFAULT_CHUNK_BYTES = 1 << 20  # 1 MiB
@@ -150,7 +152,8 @@ class ChunkStore:
 
     def __init__(self, root: Optional[os.PathLike] = None,
                  chunk_bytes: int = DEFAULT_CHUNK_BYTES,
-                 max_chain: int = 8):
+                 max_chain: int = 8, *,
+                 telemetry: Optional["tlm.Telemetry"] = None):
         self.chunk_bytes = int(chunk_bytes)
         self.max_chain = int(max_chain)
         self.root = Path(root) if root is not None else None
@@ -167,11 +170,15 @@ class ChunkStore:
         # because gc() runs under a caller's guard (DiskSet.gc_all collects
         # live refs from many managers under the same lock).
         self.gc_lock = threading.RLock()
-        self.stats = {"put_bytes": 0, "dedup_bytes": 0, "get_bytes": 0,
-                      "put_chunks": 0, "dedup_chunks": 0,
-                      "delta_chunks": 0, "rebased": 0,
-                      "ingest_bytes": 0, "ingest_dedup_bytes": 0,
-                      "ingest_records": 0}
+        # telemetry registry behind the historical dict shape: .stats is
+        # a read-only live view, writes go through .metrics
+        self.tel = tlm.resolve(telemetry)
+        scope = self.tel.scope("chunkstore")
+        self.metrics = scope.counters(
+            "put_bytes", "dedup_bytes", "get_bytes", "put_chunks",
+            "dedup_chunks", "delta_chunks", "rebased", "ingest_bytes",
+            "ingest_dedup_bytes", "ingest_records")
+        self.stats = scope.view()
         # per-client uplink accounting (client id -> counters); the server
         # credits volunteers by the deduped bytes they actually moved
         self.uplinks: Dict[str, Dict[str, int]] = {}
@@ -197,11 +204,13 @@ class ChunkStore:
         h = sha256(data)
         with self._lock:
             if self.has(h):
-                self.stats["dedup_bytes"] += len(data)
-                self.stats["dedup_chunks"] += 1
+                self.metrics.dedup_bytes.inc(len(data))
+                self.metrics.dedup_chunks.inc()
                 return h
-            self.stats["put_bytes"] += len(data)
-            self.stats["put_chunks"] += 1
+            self.metrics.put_bytes.inc(len(data))
+            self.metrics.put_chunks.inc()
+            if self.tel.tracing:
+                self.tel.event("put", ref=h[:16], bytes=len(data))
             if self.root is None:
                 self._mem[h] = bytes(data)
             else:
@@ -227,7 +236,7 @@ class ChunkStore:
             data = self._path(h).read_bytes()
         if sha256(data) != h:  # integrity (sandbox/trust analogue)
             raise IOError(f"chunk {h[:12]} failed integrity check")
-        self.stats["get_bytes"] += len(data)
+        self.metrics.get_bytes.inc(len(data))
         return data
 
     def delete(self, ref: str) -> None:
@@ -274,7 +283,7 @@ class ChunkStore:
         if depth > self.max_chain:
             full = full_bytes if full_bytes is not None else _xor_bytes(
                 self.resolve(parent_ref), xor_bytes)
-            self.stats["rebased"] += 1
+            self.metrics.rebased.inc()
             return self.put(full)
         payload = rle_zero_encode(xor_bytes)
         compressed = True
@@ -291,12 +300,15 @@ class ChunkStore:
         ref = DELTA_PREFIX + h
         with self._lock:
             if self.has(ref):
-                self.stats["dedup_bytes"] += len(rec)
-                self.stats["dedup_chunks"] += 1
+                self.metrics.dedup_bytes.inc(len(rec))
+                self.metrics.dedup_chunks.inc()
             else:
-                self.stats["put_bytes"] += len(rec)
-                self.stats["put_chunks"] += 1
-                self.stats["delta_chunks"] += 1
+                self.metrics.put_bytes.inc(len(rec))
+                self.metrics.put_chunks.inc()
+                self.metrics.delta_chunks.inc()
+                if self.tel.tracing:
+                    self.tel.event("put", ref=ref[:16], bytes=len(rec),
+                                   delta=True, depth=depth)
                 if self.root is None:
                     self._mem_delta[h] = rec
                 else:
@@ -315,7 +327,7 @@ class ChunkStore:
 
     def _get_delta(self, ref: str) -> DeltaRecord:
         rec = self._delta_bytes(ref[len(DELTA_PREFIX):])
-        self.stats["get_bytes"] += len(rec)
+        self.metrics.get_bytes.inc(len(rec))
         return DeltaRecord.unpack(rec)
 
     def ref_depth(self, ref: str) -> int:
@@ -430,7 +442,7 @@ class ChunkStore:
         needed = sorted(r for r in offered if not self.has(r))
         moved = sum(offered[r] for r in needed)
         dedup = sum(self.object_size(r) for r in offered if self.has(r))
-        self.stats["ingest_dedup_bytes"] += dedup
+        self.metrics.ingest_dedup_bytes.inc(dedup)
         if client_id is not None:
             self._client_log(client_id)["bytes_dedup"] += dedup
         return needed, moved, dedup
@@ -499,8 +511,11 @@ class ChunkStore:
             if not self.has(DELTA_PREFIX + h):
                 written += len(b)
             self._write_delta(h, b, depth)
-        self.stats["ingest_bytes"] += written
-        self.stats["ingest_records"] += len(records)
+        self.metrics.ingest_bytes.inc(written)
+        self.metrics.ingest_records.inc(len(records))
+        if self.tel.tracing:
+            self.tel.event("ingest", records=len(records), bytes=written,
+                           client=client_id)
         if client_id is not None:
             log = self._client_log(client_id)
             log["records"] += len(records)
@@ -510,6 +525,8 @@ class ChunkStore:
     def wipe(self) -> None:
         """Simulated disk loss: drop every object (fault injection — the
         churn simulator's "the volunteer's disk died" event)."""
+        if self.tel.tracing:
+            self.tel.event("wipe")
         with self._lock:
             self._mem.clear()
             self._mem_delta.clear()

@@ -22,6 +22,7 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core import telemetry as tlm
 from repro.core.control import CapsuleRuntime, Coordinator, HostSupervisor
 from repro.core.scheduler import SimClock, VolunteerScheduler
 from repro.core.snapshots import SnapshotManager
@@ -50,6 +51,10 @@ class SimWorker:
 
 @dataclass
 class RoundStats:
+    """Per-round snapshot, derived from telemetry-registry deltas: every
+    field below is ``after - before`` of a registry counter (scheduler,
+    replica or trainer scope) bracketing the round — no hand-threaded
+    per-round accumulators."""
     step: int
     loss: float
     units: int
@@ -66,6 +71,8 @@ class RoundStats:
     uplink_dense: int = 0        # int8 payload had volunteers sent it whole
     uplink_moved: int = 0        # deduped bytes actually transferred up
     uplink_dedup: int = 0        # bytes the server already held
+    lease_expiries: int = 0      # deadline-driven lease losses this round
+    read_repairs: int = 0        # objects healed from peers this round
 
 
 class VolunteerTrainer:
@@ -81,7 +88,8 @@ class VolunteerTrainer:
                  uplink: bool = False,
                  uplink_chunk_bytes: int = DEFAULT_UPLINK_CHUNK,
                  uplink_mode: str = "auto",
-                 replicas=None):
+                 replicas=None,
+                 telemetry: Optional[tlm.Telemetry] = None):
         """grad_fn(params, batch)->(loss, grads); apply_fn(state, grads)->state.
 
         ``scheduler`` may be a single ``VolunteerScheduler`` or a
@@ -141,7 +149,12 @@ class VolunteerTrainer:
         self._grad_cache: Dict[str, tuple] = {}   # result_hash -> (loss, grads)
         self._completed: Dict[int, str] = {}      # drained, not yet consumed
         self._uplink_enc: Dict[str, UplinkEncoder] = {}   # per volunteer
-        self._round_uplink = [0, 0, 0]            # dense, moved, dedup
+        # uplink accounting lives in the registry; RoundStats reads deltas
+        self.tel = tlm.resolve(telemetry)
+        scope = self.tel.scope("trainer")
+        self.tmetrics = scope.counters("uplink_dense", "uplink_moved",
+                                       "uplink_dedup", "folds")
+        self.tstats = scope.view()
         # unit -> {worker: (moved, dedup)} awaiting quorum validation
         self._pending_credit: Dict[int, Dict[str, tuple]] = {}
         self.last_restore_plan: Optional[dict] = None
@@ -149,6 +162,12 @@ class VolunteerTrainer:
         # elastic membership: called when the fleet empties — a real
         # volunteer project keeps receiving new volunteers
         self.respawn: Optional[Callable[["VolunteerTrainer"], None]] = None
+        # fault-injection hook (ChurnSim): called after every dispatch
+        # sweep inside round(), while reports are still buffered and
+        # leases may be open — the window where a mid-round shard kill
+        # or worker loss is observable
+        self.on_sweep: Optional[Callable[["VolunteerTrainer", int],
+                                         None]] = None
 
     # ---------------- fleet management ----------------
     def add_worker(self, worker: SimWorker) -> None:
@@ -210,9 +229,9 @@ class VolunteerTrainer:
         enc.gc()        # the client store only needs the latest round
         moved = log1.get("bytes_in", 0) - log0.get("bytes_in", 0)
         dedup = log1.get("bytes_dedup", 0) - log0.get("bytes_dedup", 0)
-        self._round_uplink[0] += update.dense_bytes
-        self._round_uplink[1] += moved
-        self._round_uplink[2] += dedup
+        self.tmetrics.uplink_dense.inc(update.dense_bytes)
+        self.tmetrics.uplink_moved.inc(moved)
+        self.tmetrics.uplink_dedup.inc(dedup)
         if moved or dedup:
             # credit settles only after quorum validates this worker's
             # result (_settle_uplink_credit) — an always-invalid worker
@@ -232,6 +251,21 @@ class VolunteerTrainer:
                     self.sched.credit_transfer(wid, mv, dd)
 
     # ---------------- one synchronous round ----------------
+    def _stat_snapshot(self) -> Dict[str, dict]:
+        """Registry counters RoundStats derives its per-round deltas from:
+        scheduler (or plane aggregate), replica set, trainer scope."""
+        snap = {"sched": dict(self.sched.stats),
+                "trainer": dict(self.tstats)}
+        if self.replicas is not None:
+            snap["replica"] = dict(self.replicas.rstats)
+        return snap
+
+    @staticmethod
+    def _delta(before: Dict[str, dict], after: Dict[str, dict],
+               group: str, key: str) -> int:
+        return (after.get(group, {}).get(key, 0)
+                - before.get(group, {}).get(key, 0))
+
     def round(self, step: int) -> RoundStats:
         base_index = self.cursor.next_index
         for k in range(self.micro_batches):
@@ -239,8 +273,7 @@ class VolunteerTrainer:
                               {"batch_index": base_index + k, "step": step})
         self.cursor.next_index += self.micro_batches
 
-        before = dict(self.sched.stats)
-        self._round_uplink = [0, 0, 0]
+        before = self._stat_snapshot()
         guard = 0
         while not self.sched.done():
             guard += 1
@@ -258,6 +291,8 @@ class VolunteerTrainer:
                     self.kill_worker(w.worker_id)   # dies holding the lease
                     continue
                 self._execute_unit(w, unit)
+            if self.on_sweep is not None:
+                self.on_sweep(self, step)
             if not progressed:
                 # everyone is backing off or leases are pending: advance the
                 # simulated clock past back-off windows and lease deadlines
@@ -284,6 +319,9 @@ class VolunteerTrainer:
         losses, grads = [], None
         for uid in round_units:
             loss, g = self._grad_cache[self._completed.pop(uid)]
+            self.tmetrics.folds.inc()
+            if self.tel.tracing:
+                self.tel.event("fold", unit=uid, round=step)
             losses.append(loss)
             grads = g if grads is None else jax.tree.map(
                 lambda a, b: a + b, grads, g)
@@ -298,19 +336,7 @@ class VolunteerTrainer:
         self.state = self.apply_fn(self.state, grads)
         self._grad_cache.clear()
 
-        after = dict(self.sched.stats)
-        stats = RoundStats(
-            step=step, loss=float(np.mean(losses)),
-            units=self.micro_batches,
-            reissued=after["reissued"] - before["reissued"],
-            duplicates=after["duplicates"] - before["duplicates"],
-            invalid=after["invalid_results"] - before["invalid_results"],
-            steals=after.get("steals", 0) - before.get("steals", 0),
-            refills=after.get("refills", 0) - before.get("refills", 0),
-            uplink_dense=self._round_uplink[0],
-            uplink_moved=self._round_uplink[1],
-            uplink_dedup=self._round_uplink[2],
-        )
+        snapshot_stall_ms, snapshot_bytes = 0.0, 0
         if (self.snapshots is not None and self.snapshot_every
                 and (step + 1) % self.snapshot_every == 0):
             import time as _time
@@ -321,19 +347,47 @@ class VolunteerTrainer:
                 self.state, step=step,
                 aux={"cursor": self.cursor.to_state(), "round": step},
                 block=not getattr(self.snapshots, "is_async", False))
-            stats.snapshot_stall_ms = (_time.perf_counter() - t0) * 1e3
+            snapshot_stall_ms = (_time.perf_counter() - t0) * 1e3
             info = res if not isinstance(res, Future) \
                 else self.snapshots.last_info
             if info is not None:
-                stats.snapshot_bytes = info.new_bytes
+                snapshot_bytes = info.new_bytes
         if self.replicas is not None:
             # fan this round's writes to the peers off the hot path
-            stats.replicated = self.replicas.pump()
+            self.replicas.pump()
+
+        # the per-round snapshot is pure registry deltas bracketing the
+        # round — pump/read-repair/uplink all count through one mechanism
+        after = self._stat_snapshot()
+        d = self._delta
+        stats = RoundStats(
+            step=step, loss=float(np.mean(losses)),
+            units=self.micro_batches,
+            reissued=d(before, after, "sched", "reissued"),
+            duplicates=d(before, after, "sched", "duplicates"),
+            invalid=d(before, after, "sched", "invalid_results"),
+            steals=d(before, after, "sched", "steals"),
+            refills=d(before, after, "sched", "refills"),
+            lease_expiries=d(before, after, "sched", "lease_expiries"),
+            replicated=d(before, after, "replica", "sent"),
+            read_repairs=d(before, after, "replica", "repaired"),
+            uplink_dense=d(before, after, "trainer", "uplink_dense"),
+            uplink_moved=d(before, after, "trainer", "uplink_moved"),
+            uplink_dedup=d(before, after, "trainer", "uplink_dedup"),
+            snapshot_stall_ms=snapshot_stall_ms,
+            snapshot_bytes=snapshot_bytes,
+        )
         self.history.append(stats)
         return stats
 
     def run(self, steps: int, start_step: int = 0) -> List[RoundStats]:
         return [self.round(s) for s in range(start_step, start_step + steps)]
+
+    def dump_flight_recorder(self, path) -> int:
+        """Write the telemetry hub's event ring to ``path`` as JSONL.
+
+        Returns the number of events written (0 when tracing is off)."""
+        return self.tel.dump_jsonl(path)
 
     # ---------------- crash recovery ----------------
     def restore_latest(self, abstract_state, *,

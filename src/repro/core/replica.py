@@ -50,6 +50,7 @@ import threading
 from collections import deque
 from typing import Callable, Dict, Iterable, List, Optional
 
+from repro.core import telemetry as tlm
 from repro.core.chunkstore import (DELTA_PREFIX, ChunkStore, is_delta_ref)
 
 DEFAULT_OUTBOX_LIMIT = 4096
@@ -70,7 +71,8 @@ class ReplicaSet:
 
     def __init__(self, primary: ChunkStore, peers: Iterable[ChunkStore] = (),
                  *, outbox_limit: int = DEFAULT_OUTBOX_LIMIT,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None,
+                 telemetry: Optional[tlm.Telemetry] = None):
         self.members: List[ChunkStore] = [primary, *peers]
         self.primary_index = 0
         self._down: set[int] = set()
@@ -84,10 +86,17 @@ class ReplicaSet:
         # refs owed only to down members, re-queued on mark_up — keeps a
         # long outage from re-scanning the same refs every pump
         self._parked: Dict[int, deque[str]] = {}
-        self.rstats = {"enqueued": 0, "sent": 0, "send_failed": 0,
-                       "deferred": 0, "outbox_dropped": 0,
-                       "missing_at_pump": 0, "repaired": 0,
-                       "repair_failed": 0, "promotions": 0, "synced": 0}
+        # telemetry registry behind the historical rstats shape; the
+        # namespace is `rmetrics` (not `metrics`) so `.metrics` still
+        # delegates to the primary ChunkStore via __getattr__
+        self.tel = tlm.resolve(telemetry)
+        scope = self.tel.scope("replica")
+        self.rmetrics = scope.counters(
+            "enqueued", "sent", "send_failed", "deferred",
+            "outbox_dropped", "missing_at_pump", "repaired",
+            "repair_failed", "promotions", "synced")
+        self.rstats = scope.view()
+        self._pump_hist = scope.histogram("pump_batch", tlm.SIZE_BUCKETS)
 
     # -- membership --------------------------------------------------------
     @property
@@ -105,17 +114,21 @@ class ReplicaSet:
 
     def mark_down(self, index: int) -> None:
         self._down.add(index)
+        if self.tel.tracing:
+            self.tel.event("member_down", member=index)
 
     def mark_up(self, index: int) -> None:
         """Bring a member back; refs parked for it during the outage
         re-enter the outbox and ship on the next pump."""
         self._down.discard(index)
+        if self.tel.tracing:
+            self.tel.event("member_up", member=index)
         with self._lock:
             for ref in self._parked.pop(index, ()):
                 self.outbox.append(ref)
                 if len(self.outbox) > self.outbox_limit:
                     self.outbox.popleft()
-                    self.rstats["outbox_dropped"] += 1
+                    self.rmetrics.outbox_dropped.inc()
 
     def remove(self, index: int) -> None:
         """Permanently drop a member (a volunteer that will never return),
@@ -140,7 +153,9 @@ class ReplicaSet:
             raise ValueError(f"cannot promote member {index}: marked down")
         if index != self.primary_index:
             self.primary_index = index
-            self.rstats["promotions"] += 1
+            self.rmetrics.promotions.inc()
+            if self.tel.tracing:
+                self.tel.event("promote", member=index)
 
     def promote_best(self) -> int:
         """Promote the alive member holding the most objects (deterministic
@@ -176,11 +191,11 @@ class ReplicaSet:
     # -- hot write path: primary write + O(1) enqueue, no peer I/O ---------
     def _enqueue(self, ref: str) -> None:
         with self._lock:
-            self.rstats["enqueued"] += 1
+            self.rmetrics.enqueued.inc()
             self.outbox.append(ref)
             if len(self.outbox) > self.outbox_limit:
                 self.outbox.popleft()
-                self.rstats["outbox_dropped"] += 1
+                self.rmetrics.outbox_dropped.inc()
 
     def _park(self, index: int, ref: str) -> None:
         """Hold a ref owed to a down member (bounded, deduped, counted).
@@ -191,10 +206,10 @@ class ReplicaSet:
             if ref in q:
                 return                   # a send-retry loop re-offers refs
             q.append(ref)
-            self.rstats["deferred"] += 1
+            self.rmetrics.deferred.inc()
             if len(q) > self.outbox_limit:
                 q.popleft()
-                self.rstats["outbox_dropped"] += 1
+                self.rmetrics.outbox_dropped.inc()
 
     def put(self, data: bytes) -> str:
         h = self.primary.put(data)
@@ -281,11 +296,14 @@ class ReplicaSet:
                 self.primary.ingest(records)
             except (OSError, KeyError):
                 continue
-            self.rstats["repaired"] += len(bad)
+            self.rmetrics.repaired.inc(len(bad))
+            if self.tel.tracing:
+                self.tel.event("repair", ref=ref[:16], healed=len(bad),
+                               peer=i)
             for r in bad:                    # healed objects may be missing
                 self._enqueue(r)             # on other peers too
             return len(bad)
-        self.rstats["repair_failed"] += 1
+        self.rmetrics.repair_failed.inc()
         raise IOError(f"read-repair: no alive replica can heal {ref[:14]}")
 
     # -- replication pump (off the hot path) -------------------------------
@@ -334,6 +352,8 @@ class ReplicaSet:
             batch = list(self.outbox)
             self.outbox.clear()
         n = len(batch) if max_msgs is None else min(len(batch), max_msgs)
+        if n:
+            self._pump_hist.observe(n)
         sent, retry = 0, []
         for ref in batch[:n]:
             # closure + export run under the primary's gc lock: a background
@@ -342,7 +362,7 @@ class ReplicaSet:
             # all-or-nothing per ref, deliveries happen outside the lock
             with self.primary.gc_lock:
                 if not self.primary.has(ref):
-                    self.rstats["missing_at_pump"] += 1
+                    self.rmetrics.missing_at_pump.inc()
                     continue
                 try:
                     closure = self.primary.live_closure([ref])
@@ -373,10 +393,10 @@ class ReplicaSet:
             if records:
                 for i, needed in targets:
                     if self._deliver(i, {r: records[r] for r in needed}):
-                        self.rstats["sent"] += 1
+                        self.rmetrics.sent.inc()
                         sent += 1
                     else:
-                        self.rstats["send_failed"] += 1
+                        self.rmetrics.send_failed.inc()
                         failed = True
             if failed:
                 retry.append(ref)
@@ -385,7 +405,9 @@ class ReplicaSet:
             self.outbox.extend(retry)
             while len(self.outbox) > self.outbox_limit:
                 self.outbox.popleft()
-                self.rstats["outbox_dropped"] += 1
+                self.rmetrics.outbox_dropped.inc()
+        if n and self.tel.tracing:
+            self.tel.event("pump", refs=n, sent=sent)
         return sent
 
     def flush(self, max_rounds: int = 64) -> int:
@@ -431,7 +453,7 @@ class ReplicaSet:
             msg = {r: records[r] for r in needed if r in records}
             if msg and self._deliver(i, msg):
                 moved += len(msg)
-        self.rstats["synced"] += moved
+        self.rmetrics.synced.inc(moved)
         return moved
 
     # -- GC: global closure mark, per-member sweep -------------------------

@@ -47,6 +47,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
+from repro.core import telemetry as tlm
+
 
 class SimClock:
     """Deterministic clock for simulation/tests (advanced by the driver)."""
@@ -109,7 +111,9 @@ class VolunteerScheduler:
     def __init__(self, *, replication: int = 1, quorum: int = 1,
                  deadline_s: float = 60.0, backoff_base_s: float = 0.5,
                  backoff_max_s: float = 60.0, straggler_factor: float = 0.8,
-                 max_extra_results: int = 4, clock=time.time):
+                 max_extra_results: int = 4, clock=time.time,
+                 telemetry: Optional[tlm.Telemetry] = None,
+                 shard_id: Optional[int] = None):
         assert quorum <= replication
         self.replication = replication
         self.quorum = quorum
@@ -138,10 +142,19 @@ class VolunteerScheduler:
         # uplink analogue of the pending index (no O(all units) scans)
         self._completed_log: List[tuple[int, str]] = []
         self.workers: Dict[str, WorkerInfo] = {}
-        self.stats = {"dispatched": 0, "completed": 0, "reissued": 0,
-                      "duplicates": 0, "rejected_requests": 0,
-                      "invalid_results": 0, "dropped_leases": 0,
-                      "unsolicited_results": 0, "quorum_batches": 0}
+        # telemetry: typed counters behind the historical dict shape —
+        # .stats stays a (read-only) mapping with the same keys, writes
+        # go through .metrics so the registry is the single source
+        self.tel = tlm.resolve(telemetry)
+        self.shard_id = shard_id
+        scope = self.tel.scope("scheduler")
+        self.metrics = scope.counters(
+            "dispatched", "completed", "reissued", "duplicates",
+            "rejected_requests", "invalid_results", "dropped_leases",
+            "unsolicited_results", "quorum_batches", "lease_expiries")
+        self.stats = scope.view()
+        self._dispatch_hist = scope.histogram("dispatch_latency_s",
+                                              tlm.TIME_BUCKETS_S)
 
     # ---------------- membership (elastic) ----------------
     def join(self, worker_id: str) -> WorkerInfo:
@@ -155,6 +168,9 @@ class VolunteerScheduler:
         info = self.workers.get(worker_id)
         if info is not None:
             info.alive = False
+        tel = self.tel
+        lseq = tel.event("worker_leave", worker=worker_id,
+                         shard=self.shard_id) if tel.tracing else 0
         # drop leases so units re-issue immediately — O(this worker's
         # leases) via the per-worker index, not O(open units)
         for uid, t0 in self._worker_leases.pop(worker_id, {}).items():
@@ -163,7 +179,11 @@ class VolunteerScheduler:
                     and wu.leases.get(worker_id) == t0):
                 del wu.leases[worker_id]
                 wu.straggler_issued = False   # lease lifetime ended
-                self.stats["dropped_leases"] += 1
+                self.metrics.dropped_leases.inc()
+                if tel.tracing:
+                    tel.event("lease_drop", unit=uid, worker=worker_id,
+                              shard=self.shard_id, cause="worker_leave",
+                              cause_seq=lseq)
 
     # ---------------- unit lifecycle ----------------
     def submit(self, unit_id: int, payload: dict, *,
@@ -197,6 +217,9 @@ class VolunteerScheduler:
         if prev is None or prev.completed:
             self._open.append(unit_id)
             self._n_open += 1
+        if self.tel.tracing:
+            self.tel.event("submit", unit=unit_id, shard=self.shard_id,
+                           replication=rep, quorum=quo)
         return wu
 
     def _rebuild_open(self) -> None:
@@ -241,9 +264,15 @@ class VolunteerScheduler:
                        (now + wu.deadline_s, wu.unit_id, worker_id, now))
         if straggler:
             wu.straggler_issued = True
-        self.stats["dispatched"] += 1
+        self.metrics.dispatched.inc()
         if dup and len(wu.leases) + len(wu.results) > wu.replication:
-            self.stats["duplicates"] += 1
+            self.metrics.duplicates.inc()
+        tel = self.tel
+        if tel.tracing:
+            tel.event("dispatch", unit=wu.unit_id, worker=worker_id,
+                      shard=self.shard_id, dup=dup)
+            tel.event("lease", unit=wu.unit_id, worker=worker_id,
+                      shard=self.shard_id, deadline=now + wu.deadline_s)
 
     def _dispatch(self, worker_id: str, now: float) -> Optional[WorkUnit]:
         while self._open and self.units[self._open[0]].completed:
@@ -272,15 +301,23 @@ class VolunteerScheduler:
         delay = min(self.backoff_base_s * (2 ** info.backoff_k),
                     self.backoff_max_s)
         info.backoff_until = now + delay
-        self.stats["rejected_requests"] += 1
+        self.metrics.rejected_requests.inc()
         return delay
 
     def request_work(self, worker_id: str) -> Optional[WorkUnit]:
         """A volunteer asks for work (may be told to back off)."""
+        if not self.tel.tracing:
+            return self._request_work(worker_id)
+        t0 = time.perf_counter()
+        wu = self._request_work(worker_id)
+        self._dispatch_hist.observe(time.perf_counter() - t0)
+        return wu
+
+    def _request_work(self, worker_id: str) -> Optional[WorkUnit]:
         now = self.clock()
         info = self.join(worker_id)
         if now < info.backoff_until:
-            self.stats["rejected_requests"] += 1
+            self.metrics.rejected_requests.inc()
             return None
         self._expire_leases(now)
         wu = self._dispatch(worker_id, now)
@@ -305,7 +342,7 @@ class VolunteerScheduler:
         now = self.clock()
         info = self.join(worker_id)
         if now < info.backoff_until:
-            self.stats["rejected_requests"] += 1
+            self.metrics.rejected_requests.inc()
             return []
         self._expire_leases(now)
         got: List[WorkUnit] = []
@@ -337,11 +374,18 @@ class VolunteerScheduler:
         if worker_id not in wu.ever_leased:
             # forged/free-riding report: this worker never held a lease on
             # the unit, so its "result" must not count toward quorum
-            self.stats["unsolicited_results"] += 1
+            self.metrics.unsolicited_results.inc()
+            if self.tel.tracing:
+                self.tel.event("report_rejected", unit=unit_id,
+                               worker=worker_id, shard=self.shard_id,
+                               cause="unsolicited")
             return None
         if wu.leases.pop(worker_id, None) is not None:
             self._worker_leases.get(worker_id, {}).pop(unit_id, None)
         wu.results[worker_id] = result_hash
+        if self.tel.tracing:
+            self.tel.event("report", unit=unit_id, worker=worker_id,
+                           shard=self.shard_id, result=result_hash[:16])
         return wu
 
     def _complete(self, wu: WorkUnit) -> None:
@@ -351,7 +395,11 @@ class VolunteerScheduler:
         self._open_stale += 1
         self._prune_open()
         self._completed_log.append((wu.unit_id, wu.canonical))
-        self.stats["completed"] += 1
+        self.metrics.completed.inc()
+        if self.tel.tracing:
+            self.tel.event("quorum", unit=wu.unit_id, shard=self.shard_id,
+                           canonical=wu.canonical[:16],
+                           results=len(wu.results))
         n_canon = sum(1 for x in wu.results.values() if x == wu.canonical)
         for wid, h in wu.results.items():
             info = self.workers.get(wid)
@@ -362,7 +410,7 @@ class VolunteerScheduler:
                 info.credit += 1.0 / max(1, n_canon)
             else:
                 info.invalid += 1
-                self.stats["invalid_results"] += 1
+                self.metrics.invalid_results.inc()
         # remaining leases are moot; clear them so the mirror stays exact
         for wid in wu.leases:
             self._worker_leases.get(wid, {}).pop(wu.unit_id, None)
@@ -392,7 +440,7 @@ class VolunteerScheduler:
             wu = self._accept_result(worker_id, unit_id, result_hash)
             if wu is not None:
                 touched[unit_id] = wu
-        self.stats["quorum_batches"] += 1
+        self.metrics.quorum_batches.inc()
         done: List[tuple[int, str]] = []
         for unit_id, wu in touched.items():
             if not wu.completed and wu.quorum_met():
@@ -417,7 +465,15 @@ class VolunteerScheduler:
             self._worker_leases.get(worker_id, {}).pop(uid, None)
             wu.reissues += 1
             wu.straggler_issued = False    # new lease lifetime begins
-            self.stats["reissued"] += 1
+            self.metrics.lease_expiries.inc()
+            self.metrics.reissued.inc()
+            tel = self.tel
+            if tel.tracing:
+                eseq = tel.event("lease_expire", unit=uid,
+                                 worker=worker_id, shard=self.shard_id)
+                tel.event("reissue", unit=uid, worker=worker_id,
+                          shard=self.shard_id, cause="lease_expire",
+                          cause_seq=eseq)
 
     # ---------------- progress ----------------
     def open_backlog(self) -> int:

@@ -16,6 +16,7 @@ import json
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
+from repro.core import telemetry as tlm
 from repro.core.capsule import CapsuleSpec
 from repro.core.chunkstore import ChunkStore
 from repro.core.scheduler import VolunteerScheduler
@@ -58,8 +59,10 @@ class UplinkLog:
 class VBoincServer:
     """Registry + distribution endpoint ("modified BOINC server")."""
 
-    def __init__(self, store: ChunkStore):
+    def __init__(self, store: ChunkStore, *,
+                 telemetry: Optional[tlm.Telemetry] = None):
         self.store = store
+        self.tel = tlm.resolve(telemetry)
         self.projects: Dict[str, Project] = {}
         self.transfers: Dict[str, TransferLog] = {}
         self.uplinks: Dict[str, UplinkLog] = {}   # per-project uplink log
@@ -199,6 +202,8 @@ class VBoincServer:
                 proj.canonical_updates[unit_id] = ups[wid]
                 proj.uplink_results.pop(unit_id)   # replicas folded; drop
                 self._prune(proj.canonical_updates)
+                if self.tel.tracing:
+                    self.tel.event("uplink_fold", unit=unit_id, worker=wid)
                 break
 
     def resolve_round_update(self, project: str, unit_id: int):
@@ -231,12 +236,16 @@ class VBoincServer:
         store.mark_down(old)
         try:
             if index is None:
-                return store.promote_best()
-            store.promote(index)
-            return index
+                promoted = store.promote_best()
+            else:
+                store.promote(index)
+                promoted = index
         except (IndexError, ValueError, IOError):
             store.mark_up(old)     # bad target must not brick the primary
             raise
+        if self.tel.tracing:
+            self.tel.event("failover", old=old, promoted=promoted)
+        return promoted
 
     def fail_shard(self, project: str, index: int) -> Dict[str, int]:
         """Scheduler-shard loss: reassign the dead shard's key range and

@@ -48,6 +48,7 @@ import time
 from collections import deque
 from typing import Deque, Dict, Iterator, List, Optional, Tuple
 
+from repro.core import telemetry as tlm
 from repro.core.scheduler import (SimClock, VolunteerScheduler, WorkerInfo,
                                   WorkUnit)
 
@@ -108,9 +109,11 @@ class ShardedScheduler:
                  backoff_base_s: float = 0.5, backoff_max_s: float = 60.0,
                  straggler_factor: float = 0.8, max_extra_results: int = 4,
                  clock=time.time, watermark: int = 2, refill_batch: int = 8,
-                 steal: bool = True, report_batch_max: int = 1024):
+                 steal: bool = True, report_batch_max: int = 1024,
+                 telemetry: Optional[tlm.Telemetry] = None):
         if shards < 1:
             raise ValueError("need at least one shard")
+        self.tel = tlm.resolve(telemetry)
         self.n_shards = shards
         self.replication = replication
         self.quorum = quorum
@@ -126,8 +129,9 @@ class ShardedScheduler:
             replication=replication, quorum=quorum, deadline_s=deadline_s,
             backoff_base_s=backoff_base_s, backoff_max_s=backoff_max_s,
             straggler_factor=straggler_factor,
-            max_extra_results=max_extra_results, clock=clock)
-            for _ in range(shards)]
+            max_extra_results=max_extra_results, clock=clock,
+            telemetry=self.tel, shard_id=i)
+            for i in range(shards)]
         self.n_slots = SLOTS_PER_SHARD * shards
         # range slot -> owning shard; failover rewrites entries in place
         self._range_owner: List[int] = [i % shards
@@ -142,9 +146,15 @@ class ShardedScheduler:
         # completion log preserved across shard failover migrations
         self._migrated_completed: List[tuple[int, str]] = []
         self.units = _UnitsView(self)
-        self.plane_stats = {"refills": 0, "refill_units": 0, "steals": 0,
-                            "steal_units": 0, "shard_kills": 0,
-                            "migrated_units": 0, "report_flushes": 0}
+        scope = self.tel.scope("shardplane")
+        self.metrics = scope.counters(
+            "refills", "refill_units", "steals", "steal_units",
+            "shard_kills", "migrated_units", "report_flushes")
+        self.plane_stats = scope.view()
+        self._flush_hist = scope.histogram("report_flush_size",
+                                           tlm.SIZE_BUCKETS)
+        self._dispatch_hist = scope.histogram("dispatch_latency_s",
+                                              tlm.TIME_BUCKETS_S)
 
     # ---------------- key-range routing ----------------
     def slot_of(self, worker_id: str) -> int:
@@ -204,8 +214,11 @@ class ShardedScheduler:
         home = self.home_shard(worker_id)
         got = self.shards[home].request_batch(worker_id, want)
         if got:
-            self.plane_stats["refills"] += 1
-            self.plane_stats["refill_units"] += len(got)
+            self.metrics.refills.inc()
+            self.metrics.refill_units.inc(len(got))
+            if self.tel.tracing:
+                self.tel.event("refill", worker=worker_id, shard=home,
+                               n=len(got))
             q.extend((home, wu.unit_id) for wu in got)
             return
         if not self.steal:
@@ -219,18 +232,29 @@ class ShardedScheduler:
             return
         got = self.shards[victim].request_batch(worker_id, want, tail=True)
         if got:
-            self.plane_stats["steals"] += 1
-            self.plane_stats["steal_units"] += len(got)
+            self.metrics.steals.inc()
+            self.metrics.steal_units.inc(len(got))
+            if self.tel.tracing:
+                self.tel.event("steal", worker=worker_id, shard=victim,
+                               n=len(got), home=home)
             q.extend((victim, wu.unit_id) for wu in got)
 
     def request_work(self, worker_id: str) -> Optional[WorkUnit]:
         """O(1) pop from the volunteer's watermark queue; batch refill
         (then steal) only when the queue runs low."""
+        if not self.tel.tracing:
+            return self._request_work(worker_id)
+        t0 = time.perf_counter()
+        wu = self._request_work(worker_id)
+        self._dispatch_hist.observe(time.perf_counter() - t0)
+        return wu
+
+    def _request_work(self, worker_id: str) -> Optional[WorkUnit]:
         now = self.clock()
         home = self.shards[self.home_shard(worker_id)]
         info = home.join(worker_id)
         if now < info.backoff_until:
-            home.stats["rejected_requests"] += 1
+            home.metrics.rejected_requests.inc()
             return None
         q = self._queues.setdefault(worker_id, deque())
         if len(q) < self.watermark:
@@ -272,7 +296,8 @@ class ShardedScheduler:
         done: List[tuple[int, str]] = []
         for sidx, reports in by_shard.items():
             done.extend(self.shards[sidx].report_batch(reports))
-        self.plane_stats["report_flushes"] += 1
+        self.metrics.report_flushes.inc()
+        self._flush_hist.observe(len(buf))
         return done
 
     # ---------------- progress ----------------
@@ -373,7 +398,9 @@ class ShardedScheduler:
         # when the unit completes on a shard that never saw the worker
         self.flush_reports()
         self.shard_alive[index] = False
-        self.plane_stats["shard_kills"] += 1
+        self.metrics.shard_kills.inc()
+        tel = self.tel
+        kseq = tel.event("kill_shard", shard=index) if tel.tracing else 0
         # deterministic slot reassignment: slot -> survivor round-robin
         for slot in range(self.n_slots):
             if self._range_owner[slot] == index:
@@ -391,13 +418,21 @@ class ShardedScheduler:
                 moved_done += 1
                 continue
             dropped += len(wu.leases)
-            dead.stats["dropped_leases"] += len(wu.leases)
+            dead.metrics.dropped_leases.inc(len(wu.leases))
+            if tel.tracing:
+                for wid in wu.leases:
+                    tel.event("lease_drop", unit=unit_id, worker=wid,
+                              shard=index, cause="shard_kill",
+                              cause_seq=kseq)
             wu.leases.clear()          # heap/mirror entries go stale
             wu.straggler_issued = False
             target.units[unit_id] = wu
             target._open.append(unit_id)
             target._n_open += 1
             moved_open += 1
+            if tel.tracing:
+                tel.event("migrate", unit=unit_id, shard=target_idx,
+                          from_shard=index)
             # every worker in the unit's lease history needs a ledger slot
             # on the target, or completion there would drop their credit
             # (a late report from a pre-kill lease holder is still valid)
@@ -431,7 +466,7 @@ class ShardedScheduler:
         dead._lease_heap.clear()
         dead._worker_leases.clear()
         dead.workers = {}
-        self.plane_stats["migrated_units"] += moved_open
+        self.metrics.migrated_units.inc(moved_open)
         return {"reassigned_open": moved_open, "copied_completed": moved_done,
                 "dropped_leases": dropped}
 

@@ -29,10 +29,12 @@ Two instruments make the fault-injection suite's assertions possible:
 """
 from __future__ import annotations
 
+from pathlib import Path
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
+from repro.core import telemetry as tlm
 from repro.core.replica import ReplicaSet
 
 
@@ -40,11 +42,18 @@ class ChurnSim:
     """Scripted, seedable kill/revive/drop/reorder driver for a ReplicaSet."""
 
     def __init__(self, replicas: Optional[ReplicaSet] = None, seed: int = 0,
-                 *, shards=None):
+                 *, shards=None, telemetry: Optional[tlm.Telemetry] = None,
+                 dump_on_fault: Optional[Path] = None):
         if replicas is None and shards is None:
             raise ValueError("ChurnSim needs replicas= and/or shards=")
         self.replicas = replicas
         self.shards = shards           # a ShardedScheduler (or None)
+        # the flight-recorder hook: dump the hub's ring to
+        # <dump_on_fault>/fault-<step>-<kind>.jsonl after every fault step
+        self.tel = tlm.resolve(telemetry)
+        self.dump_on_fault = Path(dump_on_fault) if dump_on_fault else None
+        if self.dump_on_fault is not None:
+            self.dump_on_fault.mkdir(parents=True, exist_ok=True)
         self.rng = np.random.default_rng(seed)
         self.step = 0
         self.phase = "idle"
@@ -84,6 +93,14 @@ class ChurnSim:
 
     def _log(self, kind: str, detail: object) -> None:
         self.events.append((self.step, kind, detail))
+
+    def dump(self, path) -> int:
+        """Dump the telemetry flight recorder to ``path`` (JSONL)."""
+        return self.tel.dump_jsonl(path)
+
+    def _dump_fault(self, kind: str) -> None:
+        if self.dump_on_fault is not None:
+            self.dump(self.dump_on_fault / f"fault-{self.step:04d}-{kind}.jsonl")
 
     def _tick(self, phase: str) -> None:
         self.step += 1
@@ -146,6 +163,7 @@ class ChurnSim:
         if wipe:
             self.replicas.members[index].wipe()
         self._log("kill", (index, wipe))
+        self._dump_fault("kill")
         self.phase = "idle"
 
     def revive(self, index: int, sync: bool = False) -> None:
@@ -153,6 +171,7 @@ class ChurnSim:
         self._tick("fault")
         self.replicas.mark_up(index)
         self._log("revive", index)
+        self._dump_fault("revive")
         self.phase = "idle"
         if sync:
             self._tick("net")
@@ -167,6 +186,7 @@ class ChurnSim:
         else:
             self.replicas.promote(index)
         self._log("promote", index)
+        self._dump_fault("promote")
         self.phase = "idle"
         return index
 
@@ -179,6 +199,7 @@ class ChurnSim:
         self._tick("fault")
         info = self.shards.fail_shard(index)
         self._log("kill_shard", (index, info))
+        self._dump_fault("kill_shard")
         self.phase = "idle"
         return info
 

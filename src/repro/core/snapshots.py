@@ -168,8 +168,10 @@ class SnapshotManager:
                  writer_depth: int = 2,
                  auto_gc: bool = True,
                  delta: bool = True,
-                 delta_mode: str = "auto"):
+                 delta_mode: str = "auto",
+                 telemetry=None):
         self.store = store
+        self.telemetry = telemetry
         self.root = Path(root) if root is not None else None
         if self.root is not None:
             (self.root / "manifests").mkdir(parents=True, exist_ok=True)
@@ -186,7 +188,8 @@ class SnapshotManager:
         self.delta_mode = delta_mode
         self.manifests: Dict[str, Manifest] = {}
         self.order: List[str] = []                 # snapshot chain
-        self._writer = SnapshotWriter(self._write_bg, depth=writer_depth) \
+        self._writer = SnapshotWriter(self._write_bg, depth=writer_depth,
+                                      telemetry=telemetry) \
             if async_mode else None
         self._futures: deque[Future] = deque()
         self.last_info: Optional[SnapshotInfo] = None
@@ -390,8 +393,8 @@ class SnapshotManager:
                 tensors[p.key] = TensorEntry(p.shape, p.dtype, refs)
                 self._prev_refs[p.key] = refs
             # chain reuse counts as dedup, as the v1 hash-everything path did
-            self.store.stats["dedup_bytes"] += reused_bytes
-            self.store.stats["dedup_chunks"] += reused
+            self.store.metrics.dedup_bytes.inc(reused_bytes)
+            self.store.metrics.dedup_chunks.inc(reused)
             self._counter += 1
             sid = f"snap-{self._counter:06d}-{sha256(str(step).encode())[:8]}"
             parent = self.order[-1] if self.order else None

@@ -167,7 +167,7 @@ def push_update(update: UplinkUpdate, server_store: ChunkStore, *,
         log = server_store.uplinks[client_id]
         log["bytes_dedup"] -= dedup
         log["rejected"] += 1
-        server_store.stats["ingest_dedup_bytes"] -= dedup
+        server_store.metrics.ingest_dedup_bytes.inc(-dedup)
         raise
     return moved, dedup
 

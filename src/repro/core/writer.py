@@ -31,6 +31,8 @@ import time
 from concurrent.futures import Future
 from typing import Callable, Optional
 
+from repro.core import telemetry as tlm
+
 _STOP = object()
 
 
@@ -39,15 +41,21 @@ class WriterPoisonedError(RuntimeError):
 
 
 class SnapshotWriter:
-    def __init__(self, write_fn: Callable, depth: int = 2):
+    def __init__(self, write_fn: Callable, depth: int = 2, *,
+                 telemetry: Optional[tlm.Telemetry] = None):
         if depth < 1:
             raise ValueError("writer depth must be >= 1")
         self.write_fn = write_fn
         self.depth = depth
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self.error: Optional[BaseException] = None
-        self.stats = {"submitted": 0, "written": 0, "failed": 0,
-                      "backpressure_ms": 0.0, "write_ms": 0.0}
+        self.tel = tlm.resolve(telemetry)
+        scope = self.tel.scope("writer")
+        self.metrics = scope.counters("submitted", "written", "failed")
+        # ms accumulators are float-valued counters; same dict keys as ever
+        self.metrics.backpressure_ms = scope.counter("backpressure_ms", 0.0)
+        self.metrics.write_ms = scope.counter("write_ms", 0.0)
+        self.stats = scope.view()
         self._thread = threading.Thread(
             target=self._loop, name="snapshot-writer", daemon=True)
         self._thread.start()
@@ -63,8 +71,8 @@ class SnapshotWriter:
         fut: Future = Future()
         t0 = time.perf_counter()
         self._q.put((fut, args))
-        self.stats["backpressure_ms"] += (time.perf_counter() - t0) * 1e3
-        self.stats["submitted"] += 1
+        self.metrics.backpressure_ms.inc((time.perf_counter() - t0) * 1e3)
+        self.metrics.submitted.inc()
         return fut
 
     def _loop(self) -> None:
@@ -84,13 +92,13 @@ class SnapshotWriter:
                 res = self.write_fn(*args)
             except BaseException as exc:  # noqa: BLE001 — forwarded via future
                 self.error = exc
-                self.stats["failed"] += 1
+                self.metrics.failed.inc()
                 fut.set_exception(exc)
             else:
-                self.stats["written"] += 1
+                self.metrics.written.inc()
                 fut.set_result(res)
             finally:
-                self.stats["write_ms"] += (time.perf_counter() - t0) * 1e3
+                self.metrics.write_ms.inc((time.perf_counter() - t0) * 1e3)
 
     # ------------------------------------------------------------------
     def reset(self) -> None:

@@ -26,6 +26,7 @@ import jax
 import numpy as np
 
 from repro.configs.base import get_arch, reduced
+from repro.core import telemetry as tlm
 from repro.core.chunkstore import ChunkStore
 from repro.core.elastic import SimWorker, VolunteerTrainer
 from repro.core.scheduler import SimClock, VolunteerScheduler
@@ -101,6 +102,11 @@ def main(argv=None) -> dict:
                          "trainer blocks (counted as backpressure_ms in "
                          "the writer stats, i.e. visible stall) instead of "
                          "queueing unboundedly")
+    ap.add_argument("--telemetry", default=None, metavar="DIR",
+                    help="enable lifecycle tracing; writes events.jsonl "
+                         "(flight recorder), metrics.prom (Prometheus "
+                         "text exposition) and trace_summary.txt "
+                         "(trace_reduce post-mortem) into DIR at exit")
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--outdir", default=None)
     ap.add_argument("--resume", action="store_true")
@@ -126,6 +132,13 @@ def main(argv=None) -> dict:
 
     stream = TokenStream(DataConfig(cfg.vocab_size, args.seq, args.batch,
                                     seed=args.seed))
+    # one shared clock for the scheduler AND the telemetry hub: with a
+    # fixed seed the flight-recorder stream is byte-identical across runs
+    clock = SimClock()
+    tel_dir = Path(args.telemetry) if args.telemetry else None
+    if tel_dir is not None:
+        tel_dir.mkdir(parents=True, exist_ok=True)
+        tlm.set_default(tlm.Telemetry(tracing=True, clock=clock))
     root = Path(args.outdir) if args.outdir else None
     store = ChunkStore(root / "store" if root else None)
     replicas = None
@@ -146,11 +159,11 @@ def main(argv=None) -> dict:
                                  quorum=args.quorum, deadline_s=30.0,
                                  watermark=args.watermark,
                                  refill_batch=args.refill_batch,
-                                 clock=SimClock())
+                                 clock=clock)
     else:
         sched = VolunteerScheduler(replication=args.replication,
                                    quorum=args.quorum, deadline_s=30.0,
-                                   clock=SimClock())
+                                   clock=clock)
     state = api.TrainState(init_tree(specs.params, jax.random.key(args.seed)),
                            init_tree(specs.opt, jax.random.key(args.seed)))
 
@@ -249,6 +262,18 @@ def main(argv=None) -> dict:
             "dense_bytes": sum(h.uplink_dense for h in hist),
             "worker_credit": {w: round(i.credit, 3) for w, i in
                               trainer.sched.workers.items()},
+        }
+    if tel_dir is not None:
+        tel = tlm.get_default()
+        n_events = trainer.dump_flight_recorder(tel_dir / "events.jsonl")
+        (tel_dir / "metrics.prom").write_text(tel.prometheus())
+        report = tlm.trace_reduce(tel)
+        (tel_dir / "trace_summary.txt").write_text(report.summary() + "\n")
+        summary["telemetry"] = {
+            "dir": str(tel_dir), "events": n_events,
+            "reissues": report.reissues,
+            "attribution_rate": round(report.attribution_rate, 4),
+            "anomalies": report.anomaly_kinds(),
         }
     print(json.dumps(summary, indent=2))
     if root is not None:

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import telemetry as tlm
 from repro.models import api
 from repro.models.lm import RunConfig
 
@@ -57,7 +58,9 @@ class ServingEngine:
             is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))
         self.lengths = np.zeros(slots, np.int32)      # per-slot position
         self.active: List[Optional[Request]] = [None] * slots
-        self.stats = {"served": 0, "decode_steps": 0, "prefills": 0}
+        scope = tlm.get_default().scope("serving")
+        self.metrics = scope.counters("served", "decode_steps", "prefills")
+        self.stats = scope.view()
 
     # ------------------------------------------------------------------
     def _prefill_fn(self, length: int):
@@ -70,7 +73,7 @@ class ServingEngine:
         t = len(req.prompt)
         logits, cache = self._prefill_fn(t)(
             self.params, {"tokens": req.prompt[None, :]})
-        self.stats["prefills"] += 1
+        self.metrics.prefills.inc()
         # insert the request's cache strip at the slot's batch row
         def insert(pool, strip):
             return pool.at[:, slot].set(strip[:, 0].astype(pool.dtype))
@@ -86,7 +89,7 @@ class ServingEngine:
         req.done_s = time.perf_counter() - req.submitted
         self.active[slot] = None
         self.lengths[slot] = 0
-        self.stats["served"] += 1
+        self.metrics.served.inc()
         return req
 
     # ------------------------------------------------------------------
@@ -109,7 +112,7 @@ class ServingEngine:
                 self.params, self.caches,
                 {"tokens": jnp.asarray(tokens),
                  "index": jnp.asarray(self.lengths)})
-            self.stats["decode_steps"] += 1
+            self.metrics.decode_steps.inc()
             nxt = np.asarray(
                 jnp.argmax(logits[:, 0, :self.cfg.vocab_size], axis=-1))
             for slot, req in enumerate(self.active):

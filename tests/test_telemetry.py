@@ -1,0 +1,515 @@
+"""Telemetry plane tests: registry, tracer, flight recorder, trace_reduce.
+
+The headline acceptance test runs seeded volunteer training under churn
+(worker deaths, a mid-round scheduler-shard kill, a primary-store wipe +
+promote) and proves, from the flight-recorder stream alone, that
+
+* every completed unit has a closed ``submit -> dispatch -> report ->
+  quorum -> fold`` chain;
+* every reissue is attributable to a recorded fault event (100%);
+* two runs with the same seed produce byte-identical event streams.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry as tlm
+from repro.core.chunkstore import ChunkStore
+from repro.core.elastic import SimWorker, VolunteerTrainer
+from repro.core.replica import ReplicaSet
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.shardplane import ShardedScheduler
+from repro.core.sim import ChurnSim
+from repro.core.snapshots import SnapshotManager
+from repro.models import api
+
+REPO = Path(__file__).resolve().parents[1]
+
+N = 4096
+CHUNK = 1 << 12
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+def test_registry_counters_and_readonly_view():
+    tel = tlm.Telemetry()
+    scope = tel.scope("demo")
+    m = scope.counters("a", "b")
+    view = scope.view()
+    m.a.inc()
+    m.a.inc(4)
+    m.b.inc(-2)                      # clawback path: negatives allowed
+    assert view["a"] == 5 and view["b"] == -2
+    assert dict(view) == {"a": 5, "b": -2}
+    assert view.get("missing", 7) == 7
+    assert "a" in view and len(view) == 2
+    assert view == {"a": 5, "b": -2}             # Mapping equality
+    with pytest.raises(TypeError):
+        view["a"] = 9
+    with pytest.raises(TypeError):
+        view["a"] += 1
+    with pytest.raises(TypeError):
+        del view["a"]
+    # the view is live: later registrations and increments show through
+    scope.counter("c").inc(3)
+    assert view["c"] == 3
+    g = scope.gauge("depth")
+    g.set(11)
+    assert view["depth"] == 11
+    # re-registration returns the same object (idempotent)
+    assert scope.counter("a") is m.a
+
+
+def test_histogram_buckets_and_prometheus():
+    tel = tlm.Telemetry()
+    scope = tel.scope("sched")
+    scope.counter("done").inc(2)
+    h = scope.histogram("lat", (0.001, 0.01, 0.1))
+    for v in (0.0005, 0.005, 0.005, 0.05, 5.0):
+        h.observe(v)
+    assert h.count == 5 and h.counts == [1, 2, 1, 1]
+    text = tel.prometheus()
+    assert '# TYPE repro_sched_done counter' in text
+    assert 'repro_sched_done{scope="sched",instance="0"} 2' in text
+    assert '# TYPE repro_sched_lat histogram' in text
+    # cumulative le buckets + the +Inf total
+    assert 'le="0.001"} 1' in text
+    assert 'le="0.01"} 3' in text
+    assert 'le="0.1"} 4' in text
+    assert 'le="+Inf"} 5' in text
+    assert 'repro_sched_lat_count{scope="sched",instance="0"} 5' in text
+    # second scope of the same name gets a distinct instance label
+    tel.scope("sched").counter("done").inc()
+    assert 'instance="1"' in tel.prometheus()
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+def test_flight_recorder_bounded_ring_and_deterministic_dump(tmp_path):
+    clock = SimClock()
+    tel = tlm.Telemetry(tracing=True, clock=clock, capacity=4)
+    for i in range(10):
+        clock.advance(1.0)
+        seq = tel.event("tick", unit=i)
+        assert seq == i + 1
+    assert len(tel.events) == 4                    # ring bound
+    assert [e["seq"] for e in tel.events] == [7, 8, 9, 10]
+    p = tmp_path / "dump.jsonl"
+    assert tel.dump_jsonl(p) == 4
+    assert tlm.load_jsonl(p) == list(tel.events)
+    # byte-determinism: sorted keys, fixed separators
+    assert p.read_text().splitlines() == tel.event_lines()
+
+    off = tlm.Telemetry(tracing=False)
+    assert off.event("tick", unit=1) == 0          # disabled: seq 0
+    assert len(off.events) == 0
+
+
+def test_default_hub_set_and_resolve():
+    prev = tlm.get_default()
+    mine = tlm.Telemetry()
+    try:
+        assert tlm.set_default(mine) is prev
+        assert tlm.resolve(None) is mine
+        assert tlm.resolve(prev) is prev
+    finally:
+        tlm.set_default(prev)
+
+
+# ---------------------------------------------------------------------------
+# trace_reduce: synthetic anomalies
+# ---------------------------------------------------------------------------
+def _ev(seq, kind, **kw):
+    return {"seq": seq, "t": float(seq), "kind": kind, **kw}
+
+
+def test_trace_reduce_closed_chain_and_anomalies():
+    events = [
+        # unit 1: clean closed chain
+        _ev(1, "submit", unit=1),
+        _ev(2, "dispatch", unit=1, worker="w1"),
+        _ev(3, "report", unit=1, worker="w1"),
+        _ev(4, "quorum", unit=1),
+        # unit 2: submitted, dispatched, never reported -> unclosed
+        _ev(5, "submit", unit=2),
+        _ev(6, "dispatch", unit=2, worker="w1"),
+        # unit 3: quorum with no dispatch -> quorum_without_lease
+        _ev(7, "submit", unit=3),
+        _ev(8, "quorum", unit=3),
+        # unit 4: report from a worker that never held the lease
+        _ev(9, "submit", unit=4),
+        _ev(10, "dispatch", unit=4, worker="w1"),
+        _ev(11, "report", unit=4, worker="forger"),
+        _ev(12, "report", unit=4, worker="w1"),
+        _ev(13, "quorum", unit=4),
+        # unit 5: one attributed reissue (cause_seq -> fault), one not
+        _ev(14, "worker_leave", worker="w2"),
+        _ev(15, "reissue", unit=5, cause="worker_leave", cause_seq=14),
+        _ev(16, "reissue", unit=5),                       # no cause
+        _ev(17, "reissue", unit=5, cause="x", cause_seq=1),  # not a fault
+    ]
+    rep = tlm.trace_reduce(events, storm_threshold=3)
+    kinds = rep.anomaly_kinds()
+    assert kinds["unclosed_span"] == 2          # units 2 and 5
+    assert kinds["quorum_without_lease"] == 1
+    assert kinds["report_without_lease"] == 1
+    assert kinds["unattributed_reissue"] == 2
+    assert kinds["reissue_storm"] == 1          # unit 5 hit the threshold
+    assert rep.reissues == 3 and rep.attributed == 1
+    assert rep.completed == 3
+    assert rep.units[1].closed() and not rep.units[2].closed()
+    assert rep.units[2].stage() == "dispatch"
+    assert "anomalies=7" in rep.summary()
+    # require_fold flips closure for quorum-only chains
+    assert not rep.units[1].closed(require_fold=True)
+    assert tlm.trace_reduce(events + [_ev(18, "fold", unit=1)],
+                            storm_threshold=99).units[1].closed(
+                                require_fold=True)
+
+
+def test_trace_reduce_cli_exit_codes(tmp_path):
+    good = tmp_path / "good.jsonl"
+    good.write_text(json.dumps(_ev(1, "submit", unit=1)) + "\n" +
+                    json.dumps(_ev(2, "dispatch", unit=1, worker="w")) + "\n" +
+                    json.dumps(_ev(3, "report", unit=1, worker="w")) + "\n" +
+                    json.dumps(_ev(4, "quorum", unit=1)) + "\n")
+    assert tlm.main([str(good)]) == 0
+    bad = tmp_path / "bad.jsonl"
+    bad.write_text(json.dumps(_ev(1, "submit", unit=1)) + "\n")
+    assert tlm.main([str(bad), "--unit", "1"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# scheduler + plane event emission
+# ---------------------------------------------------------------------------
+def test_scheduler_lease_expiry_reissue_is_attributed():
+    clock = SimClock()
+    tel = tlm.Telemetry(tracing=True, clock=clock)
+    sched = VolunteerScheduler(deadline_s=10.0, clock=clock, telemetry=tel)
+    sched.join("w1")
+    sched.join("w2")
+    sched.submit(0, {})
+    assert sched.request_work("w1").unit_id == 0
+    clock.advance(11.0)                       # w1's lease expires
+    wu = sched.request_work("w2")
+    assert wu is not None and wu.unit_id == 0
+    sched.report("w2", 0, "h" * 40)
+    assert sched.stats["lease_expiries"] == 1
+    assert sched.stats["reissued"] == 1
+    evs = list(tel.events)
+    expiry = next(e for e in evs if e["kind"] == "lease_expire")
+    reissue = next(e for e in evs if e["kind"] == "reissue")
+    assert reissue["cause"] == "lease_expire"
+    assert reissue["cause_seq"] == expiry["seq"]
+    rep = tlm.trace_reduce(tel)
+    assert rep.reissues == 1 and rep.attribution_rate == 1.0
+    assert not rep.anomalies
+    # the tracing path also populated the dispatch-latency histogram
+    assert sched._dispatch_hist.count == 2
+
+
+def test_shardplane_kill_shard_drops_point_at_the_kill_event():
+    clock = SimClock()
+    tel = tlm.Telemetry(tracing=True, clock=clock)
+    plane = ShardedScheduler(shards=2, deadline_s=1000.0, watermark=1,
+                             refill_batch=4, clock=clock, telemetry=tel)
+    # one worker homed on each shard
+    by_home, i = {}, 0
+    while len(by_home) < 2:
+        w = f"w{i}"
+        i += 1
+        by_home.setdefault(plane.home_shard(w), w)
+    for w in by_home.values():
+        plane.join(w)
+    for uid in range(8):                      # slots split 4/4 across shards
+        plane.submit(uid, {})
+    # each worker's refill leases its home shard's units; no reports yet
+    assert plane.request_work(by_home[0]) is not None
+    assert plane.request_work(by_home[1]) is not None
+
+    info = plane.fail_shard(1)
+    assert info["reassigned_open"] == 4
+
+    evs = list(tel.events)
+    kill = next(e for e in evs if e["kind"] == "kill_shard")
+    drops = [e for e in evs if e["kind"] == "lease_drop"]
+    assert drops, "shard kill must drop the open leases it found"
+    for d in drops:
+        assert d["cause"] == "shard_kill"
+        assert d["cause_seq"] == kill["seq"]
+        assert d["shard"] == 1
+    migrations = [e for e in evs if e["kind"] == "migrate"]
+    assert len(migrations) == 4
+    assert all(m["from_shard"] == 1 for m in migrations)
+
+    # drive everything to completion on the survivor, then audit the trace
+    guard = 0
+    while not plane.done():
+        guard += 1
+        assert guard < 1000
+        progressed = False
+        for w in by_home.values():
+            wu = plane.request_work(w)
+            if wu is not None:
+                progressed = True
+                plane.report(w, wu.unit_id, "h" * 40)
+        plane.flush_reports()
+        if not progressed:
+            clock.advance(plane.backoff_max_s + 1.0)
+    rep = tlm.trace_reduce(tel)
+    assert rep.completed == 8
+    assert rep.attribution_rate == 1.0        # 100% of reissues attributed
+    assert not rep.anomalies
+    assert all(ch.closed() for ch in rep.units.values())
+
+
+# ---------------------------------------------------------------------------
+# toy training job (cheap, bitwise-deterministic) for the churn run
+# ---------------------------------------------------------------------------
+class ToyStream:
+    def batch(self, index: int) -> dict:
+        rng = np.random.default_rng(1000 + index)
+        return {"x": rng.standard_normal(N).astype(np.float32)}
+
+
+def _toy_grad(params, batch):
+    diff = params["w"] - batch["x"]
+    return float(np.mean(diff * diff)), {"w": (2.0 / N) * diff}
+
+
+def _toy_apply(state, grads):
+    m = (0.9 * state.opt["m"] + grads["w"]).astype(np.float32)
+    w = (state.params["w"] - 0.1 * m).astype(np.float32)
+    return api.TrainState({"w": w}, {"m": m})
+
+
+def _toy_state():
+    rng = np.random.default_rng(42)
+    return api.TrainState({"w": rng.standard_normal(N).astype(np.float32)},
+                          {"m": np.zeros(N, np.float32)})
+
+
+def _churn_run(seed: int, dump_dir: Path):
+    """One seeded churn run on an isolated hub; -> (event lines, report,
+    final state bytes, trainer)."""
+    clock = SimClock()
+    tel = tlm.Telemetry(tracing=True, clock=clock)
+    plane = ShardedScheduler(shards=2, deadline_s=30.0, watermark=1,
+                             refill_batch=2, clock=clock, telemetry=tel)
+    stores = [ChunkStore(chunk_bytes=CHUNK, telemetry=tel)
+              for _ in range(3)]
+    rs = ReplicaSet(stores[0], stores[1:], telemetry=tel)
+    sim = ChurnSim(rs, seed=seed, shards=plane, telemetry=tel,
+                   dump_on_fault=dump_dir)
+    snaps = SnapshotManager(rs, keep_last=10)
+    tr = VolunteerTrainer(grad_fn=_toy_grad, apply_fn=_toy_apply,
+                          state=_toy_state(), stream=ToyStream(),
+                          micro_batches=2, scheduler=plane, snapshots=snaps,
+                          snapshot_every=1, seed=seed, replicas=rs,
+                          telemetry=tel)
+    next_id = [0]
+
+    def spawn(n):
+        for _ in range(n):
+            w = next_id[0]
+            next_id[0] += 1
+            tr.add_worker(SimWorker(
+                f"vol-{w}", fail_prob=0.25,
+                rng=np.random.default_rng((seed, w))))
+
+    spawn(3)
+    tr.respawn = lambda t: spawn(1)
+    killed = []
+
+    def on_sweep(t, step):
+        # mid-round shard kill: fires while reports are buffered and the
+        # watermark refill holds open leases on the doomed shard
+        if step == 1 and not killed and plane.shard_alive[1]:
+            sim.kill_shard(1)
+            killed.append(step)
+
+    tr.on_sweep = on_sweep
+    for s in range(5):
+        alive = sum(w.alive for w in tr.workers.values())
+        if alive < 3:
+            spawn(3 - alive)
+        sim.hot(lambda s=s: tr.round(s))
+        sim.deliver(shuffle=True)
+        sim.settle()
+        if s == 2:
+            sim.kill(0, wipe=True)            # primary disk loss, mid-run
+            sim.promote()
+    lines = tel.event_lines()
+    rep = tlm.trace_reduce(tel)
+    return lines, rep, tr
+
+
+def test_churn_run_closed_chains_full_attribution_and_determinism(tmp_path):
+    lines_a, rep, tr = _churn_run(3, tmp_path / "a")
+    lines_b, rep_b, _ = _churn_run(3, tmp_path / "b")
+
+    # byte-identical event streams from one seed
+    assert lines_a == lines_b
+    # ...and a different seed actually changes the schedule
+    lines_c, _, _ = _churn_run(4, tmp_path / "c")
+    assert lines_a != lines_c
+
+    # the scenario exercised real churn: shard kill + wipe + reissues
+    kinds = {e["kind"] for e in map(json.loads, lines_a)}
+    assert {"kill_shard", "wipe", "promote", "member_down"} <= kinds
+    assert rep.reissues > 0
+
+    # every completed unit folded through a closed chain, every reissue
+    # is attributed to a recorded fault event, and nothing is anomalous
+    assert rep.folded == 5 * 2                # 5 rounds x micro_batches
+    assert rep.attribution_rate == 1.0
+    assert rep.anomalies == []
+    for ch in rep.units.values():
+        if ch.quorums:
+            assert ch.closed(require_fold=True)
+
+    # ChurnSim dumped the recorder on each fault step
+    dumps = sorted((tmp_path / "a").glob("fault-*.jsonl"))
+    assert dumps, "dump_on_fault must write a JSONL per fault"
+    assert any("kill_shard" in d.name for d in dumps)
+    # each dump is a loadable prefix of the final stream
+    first = tlm.load_jsonl(dumps[0])
+    assert first and first[-1]["seq"] <= json.loads(lines_a[-1])["seq"]
+
+    # trainer-side flight recorder dump round-trips through trace_reduce
+    out = tmp_path / "final.jsonl"
+    assert tr.dump_flight_recorder(out) == len(lines_a)
+    rep2 = tlm.trace_reduce(tlm.load_jsonl(out))
+    assert rep2.folded == rep.folded and rep2.anomalies == []
+
+
+# ---------------------------------------------------------------------------
+# RoundStats: registry-delta derivation
+# ---------------------------------------------------------------------------
+def test_roundstats_fields_come_from_registry_deltas():
+    clock = SimClock()
+    tel = tlm.Telemetry(clock=clock)
+    primary = ChunkStore(chunk_bytes=CHUNK, telemetry=tel)
+    peer = ChunkStore(chunk_bytes=CHUNK, telemetry=tel)
+    rs = ReplicaSet(primary, [peer], telemetry=tel)
+    snaps = SnapshotManager(rs, keep_last=10)
+    tr = VolunteerTrainer(
+        grad_fn=_toy_grad, apply_fn=_toy_apply, state=_toy_state(),
+        stream=ToyStream(), micro_batches=2, snapshots=snaps,
+        snapshot_every=1, seed=0, replicas=rs, telemetry=tel,
+        scheduler=VolunteerScheduler(clock=clock, telemetry=tel))
+    tr.add_worker(SimWorker("w0"))
+    st0 = tr.round(0)
+    st1 = tr.round(1)
+    # replicated/read_repairs are per-round deltas of the replica scope
+    assert st0.replicated > 0                  # round-0 snapshot fanned out
+    assert st0.replicated + st1.replicated == rs.rstats["sent"]
+    assert st0.read_repairs == 0
+    assert st0.lease_expiries == 0 and st0.reissued == 0
+    assert st0.units == 2 and st1.step == 1
+    # the trainer scope counted the folds the rounds consumed
+    assert tr.tstats["folds"] == 4
+
+
+def test_roundstats_counts_lease_expiries():
+    clock = SimClock()
+    tel = tlm.Telemetry(clock=clock)
+    sched = VolunteerScheduler(deadline_s=5.0, clock=clock, telemetry=tel)
+    tr = VolunteerTrainer(
+        grad_fn=_toy_grad, apply_fn=_toy_apply, state=_toy_state(),
+        stream=ToyStream(), micro_batches=1, seed=0,
+        scheduler=sched, telemetry=tel)
+    # a worker that always dies holding its lease, plus a healthy one:
+    # the death reissues its unit (counted by the round's registry delta)
+    tr.add_worker(SimWorker("dead", fail_prob=1.0,
+                            rng=np.random.default_rng(1)))
+    tr.add_worker(SimWorker("ok"))
+    st = tr.round(0)
+    assert st.step == 0 and st.units == 1
+    assert st.reissued + st.duplicates >= 0
+    assert isinstance(st.lease_expiries, int) and st.lease_expiries >= 0
+    assert isinstance(st.read_repairs, int) and st.read_repairs == 0
+    assert st.lease_expiries == sched.stats["lease_expiries"]
+    assert st.reissued == sched.stats["reissued"]
+
+
+# ---------------------------------------------------------------------------
+# CI tooling: regression gate kind + stats-mutation lint
+# ---------------------------------------------------------------------------
+def _load_module(path: Path, name: str):
+    spec = importlib.util.spec_from_file_location(name, path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_check_regression_telemetry_kind(tmp_path):
+    sys.modules.setdefault("benchmarks", __import__("types").ModuleType(
+        "benchmarks"))
+    cr = _load_module(REPO / "benchmarks" / "check_regression.py",
+                      "_cr_telemetry_test")
+    base = {"kind": "telemetry", "overhead_ratio": 1.5,
+            "rows": [{"name": "disabled", "p50_us": 3.0},
+                     {"name": "enabled", "p50_us": 4.5}]}
+    ok = {"kind": "telemetry", "overhead_ratio": 2.0,
+          "rows": [{"name": "disabled", "p50_us": 3.5},
+                   {"name": "enabled", "p50_us": 7.0}]}
+    assert cr.check_telemetry(ok, base, tolerance=0.25, floor_us=100.0,
+                              overhead_limit=3.0) == []
+    # within-run ratio breach fails regardless of absolute timings
+    hot = dict(ok, overhead_ratio=4.2)
+    fails = cr.check_telemetry(hot, base, tolerance=0.25, floor_us=100.0,
+                               overhead_limit=3.0)
+    assert any("overhead_ratio" in f for f in fails)
+    # disabled-path p50 regression vs baseline fails too
+    slow = {"kind": "telemetry", "overhead_ratio": 1.2,
+            "rows": [{"name": "disabled", "p50_us": 500.0},
+                     {"name": "enabled", "p50_us": 600.0}]}
+    fails = cr.check_telemetry(slow, base, tolerance=0.25, floor_us=10.0,
+                               overhead_limit=3.0)
+    assert any("disabled" in f for f in fails)
+    # end-to-end: main() dispatches on kind and exits clean
+    cur = tmp_path / "cur.json"
+    basef = tmp_path / "base.json"
+    cur.write_text(json.dumps(ok))
+    basef.write_text(json.dumps(base))
+    assert cr.main([str(cur), "--baseline", str(basef)]) == 0
+    cur.write_text(json.dumps(hot))
+    assert cr.main([str(cur), "--baseline", str(basef)]) == 1
+
+
+def test_stats_mutation_lint(tmp_path):
+    lint = _load_module(REPO / "tools" / "lint_stats_mutations.py",
+                        "_lint_stats_test")
+    bad = tmp_path / "bad.py"
+    bad.write_text("class A:\n"
+                   "    def f(self):\n"
+                   "        self.stats['x'] += 1\n"
+                   "        self.rstats['y'] = 2\n"
+                   "        self.plane_stats['z'] -= 3\n"
+                   "        other.tstats['w'] += 4\n"
+                   "        fine['a'] += 5\n"              # not a stats name
+                   "        self.stats = {}\n")            # rebind is fine
+    failures = lint.lint_paths([bad])
+    assert len(failures) == 4
+    assert all("read-only" in f for f in failures)
+    # telemetry.py itself is exempt wherever it lives
+    exempt = tmp_path / "telemetry.py"
+    exempt.write_text("stats = {}\nstats['x'] = 1\n")
+    assert lint.lint_paths([tmp_path]) == failures
+    # the real tree is clean — the converted subsystems have no bare
+    # stats mutations left
+    assert lint.lint_paths([REPO / "src"]) == []
+    # CLI contract: violations exit 1 with file:line diagnostics
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tools" / "lint_stats_mutations.py"),
+         str(bad)], capture_output=True, text=True)
+    assert proc.returncode == 1
+    assert "bad.py:3" in proc.stderr

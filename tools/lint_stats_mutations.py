@@ -1,0 +1,91 @@
+"""AST lint: reject bare ``<obj>.stats[...] += ...`` mutations.
+
+PR 8 moved every component's counters onto the telemetry registry
+(``core/telemetry.py``); the historical ``self.stats`` dicts are now
+read-only :class:`~repro.core.telemetry.StatsView` objects, and mutation
+goes through the typed handles (``self.metrics.<key>.inc()``).  A stray
+``self.stats["x"] += 1`` would raise ``TypeError`` at runtime — but only
+on the code path that executes it, so this lint rejects the pattern at
+the AST level across the whole tree instead.
+
+Flags any ``AugAssign`` or ``Assign`` whose target is a subscript of an
+attribute (or bare name) called ``stats``, ``rstats``, ``plane_stats``
+or ``tstats``, anywhere under the given paths, except inside
+``telemetry.py`` itself (the one module allowed to own metric storage).
+
+    python tools/lint_stats_mutations.py src
+"""
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from pathlib import Path
+
+STATS_NAMES = frozenset({"stats", "rstats", "plane_stats", "tstats"})
+ALLOWED_FILES = frozenset({"telemetry.py"})
+
+
+def _stats_subscript(node: ast.expr) -> bool:
+    """True for ``<expr>.stats[...]`` / ``stats[...]`` targets."""
+    if not isinstance(node, ast.Subscript):
+        return False
+    base = node.value
+    if isinstance(base, ast.Attribute):
+        return base.attr in STATS_NAMES
+    if isinstance(base, ast.Name):
+        return base.id in STATS_NAMES
+    return False
+
+
+def lint_source(source: str, filename: str) -> list[str]:
+    """-> ``file:line: message`` strings for every violation."""
+    try:
+        tree = ast.parse(source, filename=filename)
+    except SyntaxError as e:
+        return [f"{filename}:{e.lineno}: syntax error: {e.msg}"]
+    out = []
+    for node in ast.walk(tree):
+        targets = []
+        if isinstance(node, ast.AugAssign):
+            targets = [node.target]
+        elif isinstance(node, ast.Assign):
+            targets = node.targets
+        for t in targets:
+            if _stats_subscript(t):
+                snippet = ast.unparse(t)
+                out.append(f"{filename}:{t.lineno}: mutation of read-only "
+                           f"stats view `{snippet}` — use the typed "
+                           f"metric: <component>.metrics.<key>.inc()")
+    return out
+
+
+def lint_paths(paths: list[Path]) -> list[str]:
+    failures = []
+    for root in paths:
+        files = [root] if root.is_file() else sorted(root.rglob("*.py"))
+        for f in files:
+            if f.name in ALLOWED_FILES:
+                continue
+            failures.extend(lint_source(f.read_text(), str(f)))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to scan (default: src)")
+    args = ap.parse_args(argv)
+    failures = lint_paths([Path(p) for p in args.paths])
+    for f in failures:
+        print(f, file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} stats-view mutation(s) found; counters "
+              f"must go through the telemetry registry", file=sys.stderr)
+        return 1
+    print("no bare stats mutations found")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
