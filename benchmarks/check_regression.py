@@ -29,6 +29,16 @@ Dispatches on the ``kind`` field of the current-run JSON:
   but loosely (``--tolerance`` doubled + ``--floor-us``): absolute
   microsecond timings vary wildly across shared runners.
 
+* **edge** (``kind: "edge"``, from ``edge_egress --json``) — compares
+  against ``benchmarks/BENCH_edge.json``.  All three checks are computed
+  *within* one run: ``egress_reduction`` (primary egress no-cache /
+  with-cache) must stay ≥ ``--egress-factor`` (default 5.0), every cached
+  restore must be byte-identical to the origin, and the churn cycle must
+  be route-deterministic across seeds.
+
+An unknown ``kind`` is an error (exit 2), never a silent pass — a typo'd
+or future benchmark must not sail through a gate that checked nothing.
+
     PYTHONPATH=src:. python -m benchmarks.table2_snapshots \
         --tiny --rounds 3 --json /tmp/now.json
     PYTHONPATH=src:. python -m benchmarks.check_regression /tmp/now.json
@@ -47,6 +57,12 @@ from pathlib import Path
 BASELINE = Path(__file__).parent / "BENCH_table2.json"
 SCHED_BASELINE = Path(__file__).parent / "BENCH_scheduler.json"
 TELEMETRY_BASELINE = Path(__file__).parent / "BENCH_telemetry.json"
+EDGE_BASELINE = Path(__file__).parent / "BENCH_edge.json"
+
+# every kind this gate understands ("stall" is the implicit default for
+# historical table2 JSON without a kind field); anything else is an error,
+# never a silent pass
+KNOWN_KINDS = ("stall", "scheduler", "telemetry", "edge")
 
 # rows where the stall is real work being hidden (the zero-stall claim);
 # frozen workloads stall for ~nothing in both modes and only add noise
@@ -146,6 +162,39 @@ def check_telemetry(current: dict, baseline: dict, tolerance: float,
     return failures
 
 
+def check_edge(current: dict, baseline: dict,
+               egress_factor: float) -> list[str]:
+    """-> list of human-readable failures (empty = pass).
+
+    The load-bearing checks are computed *within* one run, so they are
+    immune to runner speed: primary egress with caches must stay at least
+    ``egress_factor`` below the no-cache baseline, every restore must be
+    byte-identical, and the kill → re-discover → demand-fill cycle must be
+    deterministic across the run's churn seeds."""
+    failures = []
+    er = current.get("egress_reduction")
+    if er is None:
+        failures.append("egress_reduction missing from run")
+    else:
+        verdict = "FAIL" if er < egress_factor else "ok"
+        print(f"  egress_reduction baseline/edge = {er:.2f}x  "
+              f"(need >= {egress_factor:.2f}x)  {verdict}")
+        if er < egress_factor:
+            failures.append(f"egress_reduction {er:.2f}x < "
+                            f"{egress_factor:.2f}x: the cache tier no "
+                            f"longer absorbs the re-attach wave")
+    for flag, msg in (("byte_identical",
+                       "a cached restore diverged from the origin bytes"),
+                      ("deterministic",
+                       "same-seed churn runs picked different routes")):
+        val = current.get(flag)
+        verdict = "FAIL" if val is not True else "ok"
+        print(f"  {flag} = {val}  {verdict}")
+        if val is not True:
+            failures.append(f"{flag}: {msg}")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("current", help="JSON from table2_snapshots --json or "
@@ -163,13 +212,25 @@ def main(argv=None) -> int:
                     help="max allowed scheduler flat_ratio (O(1) dispatch)")
     ap.add_argument("--overhead-limit", type=float, default=3.0,
                     help="max allowed telemetry enabled/disabled p50 ratio")
+    ap.add_argument("--egress-factor", type=float, default=5.0,
+                    help="min required primary-egress reduction (edge kind)")
     args = ap.parse_args(argv)
     current = json.loads(Path(args.current).read_text())
     kind = current.get("kind", "stall")
+    if kind not in KNOWN_KINDS:
+        print(f"check_regression: unknown kind {kind!r} in {args.current} "
+              f"(known: {', '.join(KNOWN_KINDS)}) — refusing to pass a "
+              f"gate it cannot check", file=sys.stderr)
+        return 2
     default_base = {"scheduler": SCHED_BASELINE,
-                    "telemetry": TELEMETRY_BASELINE}.get(kind, BASELINE)
+                    "telemetry": TELEMETRY_BASELINE,
+                    "edge": EDGE_BASELINE}.get(kind, BASELINE)
     baseline = json.loads(Path(args.baseline or default_base).read_text())
-    if kind == "telemetry":
+    if kind == "edge":
+        print(f"edge egress gate (egress_factor "
+              f">={args.egress_factor:.2f}x):")
+        failures = check_edge(current, baseline, args.egress_factor)
+    elif kind == "telemetry":
         print(f"telemetry overhead gate (overhead_limit "
               f"{args.overhead_limit:.2f}, tolerance "
               f"+{2 * args.tolerance:.0%}, floor {args.floor_us}us):")

@@ -1,0 +1,193 @@
+"""Edge-distribution benchmark: primary egress vs volunteer count.
+
+The paper's server ships every capsule itself, so its egress grows
+linearly with volunteer count (207 MB × N at 9 Mbps in the paper's own
+measurement).  With the ``EdgeTier`` in front, a cold re-attach wave
+drains from the delta caches instead: the primary pays roughly one
+capsule per cache (prefetch + demand-fill), not one per volunteer.
+
+Measured per volunteer-count row:
+
+* ``baseline_egress``  — origin bytes sent with no caches (every
+  volunteer downloads its full plan from the primary);
+* ``edge_egress``      — origin bytes sent with the cache tier attached
+  (prefetch of the hot base + demand-fills only);
+* ``cache_egress``     — bytes the caches served in the origin's stead;
+* ``agg_mbps``         — aggregate fetch bandwidth through the tier.
+
+The JSON gate (``check_regression.py --egress-factor``, kind ``edge``)
+rides on three within-run facts: ``egress_reduction`` (baseline/edge at
+the largest row), ``byte_identical`` (every sampled cached restore
+resolves to exactly the origin bytes), and ``deterministic`` (the
+kill → re-discover → stale-revive → demand-fill churn cycle picks the
+same routes when replayed, under 3 ``ChurnSim`` seeds).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import csv_line
+from repro.core.chunkstore import ChunkStore
+from repro.core.edge import EdgeCache, EdgeTier
+from repro.core.sim import ChurnSim
+
+CHUNK = 1 << 14
+CHURN_SEEDS = (7, 19, 42)
+
+
+def _build_origin(chunks: int, seed: int = 0) -> tuple[ChunkStore, list]:
+    """Origin store holding one capsule: raw base chunks plus a short
+    delta chain on top (the shape a re-attach wave actually fetches)."""
+    rng = np.random.default_rng(seed)
+    store = ChunkStore(chunk_bytes=CHUNK)
+    base = rng.integers(0, 256, size=chunks * CHUNK, dtype=np.uint8)
+    refs = store.put_buffer(memoryview(base))
+    # a few mutated blocks become delta records against the base
+    for i in range(min(4, len(refs))):
+        xor = np.zeros(CHUNK, np.uint8)
+        xor[i * 11 % CHUNK] = 1 + i
+        refs[i] = store.put_delta(refs[i], xor.tobytes())
+    return store, refs
+
+
+def _fresh_tier(origin: ChunkStore, refs: list, caches: int,
+                prefetch: bool = True) -> EdgeTier:
+    tier = EdgeTier(origin, [EdgeCache(f"edge-{i}") for i in range(caches)])
+    if prefetch:
+        tier.prefetch(refs, base_only=True)
+    return tier
+
+
+def _verify_restore(origin: ChunkStore, client: ChunkStore,
+                    refs: list) -> bool:
+    return client.resolve_buffer(refs) == origin.resolve_buffer(refs)
+
+
+def run_rows(volunteer_counts, caches: int, chunks: int) -> list[dict]:
+    rows = []
+    for volunteers in volunteer_counts:
+        # baseline: every cold volunteer drains from the primary
+        origin, refs = _build_origin(chunks)
+        e0 = origin.stats["egress_bytes"]
+        for _ in range(volunteers):
+            plan = origin.plan_send(refs, set())
+            origin.send(plan.refs)
+        baseline_egress = origin.stats["egress_bytes"] - e0
+
+        # edge: same wave through discovery + caches (fresh origin so the
+        # egress meter starts clean)
+        origin, refs = _build_origin(chunks)
+        tier = _fresh_tier(origin, refs, caches)
+        byte_identical = True
+        served = 0
+        t0 = time.perf_counter()
+        for v in range(volunteers):
+            # sample the byte-identical check: full recv + resolve on the
+            # first/last volunteer, accounting-only in between
+            if v in (0, volunteers - 1):
+                client = ChunkStore(chunk_bytes=CHUNK)
+                res = tier.fetch(refs, set(), client_store=client)
+                byte_identical &= _verify_restore(origin, client, refs)
+            else:
+                res = tier.fetch(refs, set())
+            served += res.bytes_moved
+        wall = time.perf_counter() - t0
+        rows.append({
+            "name": f"v{volunteers}",
+            "volunteers": volunteers,
+            "caches": caches,
+            "baseline_egress": int(baseline_egress),
+            "edge_egress": int(tier.stats["origin_egress_bytes"]),
+            "cache_egress": int(tier.stats["cache_egress_bytes"]),
+            "hits": int(tier.stats["hits"]),
+            "misses": int(tier.stats["misses"]),
+            "agg_mbps": round(served / max(wall, 1e-9) / 1e6, 1),
+            "byte_identical": bool(byte_identical),
+        })
+    return rows
+
+
+def churn_routes(seed: int, caches: int, chunks: int) -> list[str]:
+    """One kill → re-discover → stale-revive → demand-fill cycle; returns
+    the route sequence (who served each fetch)."""
+    origin, refs = _build_origin(chunks)
+    tier = _fresh_tier(origin, refs, caches)
+    sim = ChurnSim(seed=seed, edges=tier)
+    routes = [tier.fetch(refs, set()).route]          # warm: cache hit
+    killed = sim.random_cache_kill()
+    routes.append(tier.fetch(refs, set()).route)      # re-discover survivor
+    # stale revive: the killed cache comes back empty while every other
+    # cache goes down — it must demand-fill before it can serve
+    sim.revive_cache(killed, stale=True)
+    for i in tier.alive_indices():
+        if i != killed:
+            sim.kill_cache(i)
+    routes.append(tier.fetch(refs, set()).route)      # demand-fill + serve
+    assert tier.members[killed].can_serve(
+        origin.plan_send(refs, set()).refs), "stale cache did not fill"
+    return routes
+
+
+def check_determinism(caches: int, chunks: int) -> bool:
+    """Replay each seed's churn cycle twice: byte-identical route picks."""
+    return all(churn_routes(s, caches, chunks)
+               == churn_routes(s, caches, chunks) for s in CHURN_SEEDS)
+
+
+def _format(rows: list[dict]) -> list[str]:
+    lines = []
+    for r in rows:
+        reduction = r["baseline_egress"] / max(r["edge_egress"], 1)
+        derived = ";".join([
+            f"baseline_egress={r['baseline_egress']}",
+            f"cache_egress={r['cache_egress']}",
+            f"reduction={reduction:.1f}x",
+            f"hits={r['hits']}", f"misses={r['misses']}",
+            f"agg_mbps={r['agg_mbps']}",
+        ])
+        lines.append(csv_line(f"edge.{r['name']}", r["edge_egress"],
+                              derived))
+    return lines
+
+
+def run(tiny: bool = True) -> list[str]:
+    counts, caches, chunks = ((10, 20), 2, 8) if tiny else ((25, 100), 3, 32)
+    return _format(run_rows(counts, caches, chunks))
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI-sized run: fewer volunteers, smaller capsule")
+    ap.add_argument("--caches", type=int, default=None)
+    ap.add_argument("--json", default=None, metavar="PATH")
+    args = ap.parse_args(argv)
+    counts, caches, chunks = (((10, 20), 2, 8) if args.tiny
+                              else ((25, 100), 3, 32))
+    if args.caches is not None:
+        if args.caches < 1:
+            ap.error("--caches must be >= 1")
+        caches = args.caches
+    rows = run_rows(counts, caches, chunks)
+    deterministic = check_determinism(caches, chunks)
+    last = rows[-1]
+    reduction = last["baseline_egress"] / max(last["edge_egress"], 1)
+    print("\n".join(_format(rows)))
+    print(f"# egress_reduction={reduction:.1f}x "
+          f"deterministic={deterministic}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"bench": "edge_egress", "kind": "edge",
+                       "caches": caches, "rows": rows,
+                       "egress_reduction": round(reduction, 2),
+                       "byte_identical": all(r["byte_identical"]
+                                             for r in rows),
+                       "deterministic": deterministic}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,7 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (fig3_overhead, fig4_sprint_pcor,
+    from benchmarks import (edge_egress, fig3_overhead, fig4_sprint_pcor,
                             replica_failover, roofline, server_throughput,
                             table2_snapshots, telemetry_overhead)
 
@@ -20,6 +20,7 @@ def main() -> None:
         ("table2 (snapshot time/sizes)", table2_snapshots.run),
         ("server (§IV-C throughput)", server_throughput.run),
         ("replica (fan-out + failover)", replica_failover.run),
+        ("edge (discovery + cache egress)", edge_egress.run),
         ("roofline (dry-run derived)", roofline.run),
         ("telemetry (tracing overhead)", telemetry_overhead.run),
     ]

@@ -21,8 +21,26 @@ when the parent's manifest has been trimmed).
 
 Integrity = re-hash on read for both kinds (the paper's "trusted
 application" concern: a volunteer can verify every byte it receives).
-``transfer_plan`` is the shared block-level dedup accounting used by both
-the server's capsule distribution and a re-attaching volunteer's restore.
+
+Every transfer in the system — capsule/snapshot downlink, volunteer
+uplink, replica fan-out and edge-cache demand-fill — speaks one **Wire**
+protocol of four verbs:
+
+* ``plan_send(refs, peer_has)`` — source-side planning: which of
+  ``refs``'s delta closure a peer holding ``peer_has`` still needs, sized
+  from this store's own objects (-> :class:`TransferPlan`);
+* ``plan_recv(offered, client_id=)`` — sink-side planning: which of a
+  client's offered objects this store lacks (sizes are the *client's*
+  claim, for planning only — verified bytes accumulate in ``recv``);
+* ``send(refs)`` — the wire image of objects: ref -> packed bytes (raw
+  chunk bytes, or the packed delta record).  The receiver re-hashes
+  everything, so the wire needs no extra framing;
+* ``recv(records, client_id=)`` — validate-and-store: every ref is
+  recomputed from the record bytes and delta chains must land
+  parents-first with truthful depths, or nothing is written.
+
+The pre-Wire names (``transfer_plan``, ``ingest_plan``, ``ingest``,
+``export_records``) remain as thin deprecated shims.
 """
 from __future__ import annotations
 
@@ -32,9 +50,10 @@ import shutil
 import struct
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Protocol, runtime_checkable
 
 from repro.core import telemetry as tlm
 
@@ -147,6 +166,63 @@ class DeltaRecord:
                 if self.compressed else self.payload)
 
 
+@dataclass
+class TransferPlan:
+    """One planned object transfer, in either direction, on the Wire.
+
+    ``refs`` are the objects that must move, ``bytes_moved`` their wire
+    size, ``bytes_dedup`` the bytes the receiving side already held (the
+    dedup savings the credit accounting reports).  Unpacks as the legacy
+    ``(missing, moved, dedup)`` triple so callers written against
+    ``transfer_plan``/``ingest_plan`` keep working unchanged."""
+
+    refs: List[str]
+    bytes_moved: int
+    bytes_dedup: int
+
+    def _astuple(self) -> tuple:
+        return (self.refs, self.bytes_moved, self.bytes_dedup)
+
+    def __iter__(self):
+        return iter(self._astuple())
+
+    def __len__(self) -> int:
+        return 3
+
+    def __getitem__(self, i):
+        return self._astuple()[i]
+
+    def __bool__(self) -> bool:
+        return bool(self.refs)
+
+
+@runtime_checkable
+class Wire(Protocol):
+    """The unified transfer surface every object mover speaks.
+
+    Implemented by :class:`ChunkStore`, proxied by ``ReplicaSet`` (writes
+    enqueue for replication) and served at the edge by ``EdgeCache`` —
+    downlink capsule fetch, uplink result ingest, replica ``pump`` and
+    edge demand-fill are all ``plan_*`` + ``send`` + ``recv`` exchanges
+    between two Wire endpoints."""
+
+    def plan_send(self, refs: Iterable[str],
+                  peer_has: set) -> "TransferPlan": ...
+
+    def plan_recv(self, offered: Dict[str, int], *,
+                  client_id: Optional[str] = None) -> "TransferPlan": ...
+
+    def send(self, refs: Iterable[str]) -> Dict[str, bytes]: ...
+
+    def recv(self, records: Dict[str, bytes], *,
+             client_id: Optional[str] = None) -> int: ...
+
+
+def _warn_wire(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; speak the Wire protocol "
+                  f"({new}) instead", DeprecationWarning, stacklevel=3)
+
+
 class ChunkStore:
     """Deduplicating raw+delta object store with closure-marking GC."""
 
@@ -177,7 +253,7 @@ class ChunkStore:
         self.metrics = scope.counters(
             "put_bytes", "dedup_bytes", "get_bytes", "put_chunks",
             "dedup_chunks", "delta_chunks", "rebased", "ingest_bytes",
-            "ingest_dedup_bytes", "ingest_records")
+            "ingest_dedup_bytes", "ingest_records", "egress_bytes")
         self.stats = scope.view()
         # per-client uplink accounting (client id -> counters); the server
         # credits volunteers by the deduped bytes they actually moved
@@ -393,31 +469,55 @@ class ChunkStore:
                 stack.append(self._get_delta(r).parent)
         return seen
 
-    def transfer_plan(self, refs: Iterable[str],
-                      client_has: set[str]) -> tuple[List[str], int, int]:
-        """Block-level dedup accounting shared by server + volunteer.
+    # -- Wire: planning (both directions) ----------------------------------
+    def plan_send(self, refs: Iterable[str],
+                  peer_has: set[str]) -> TransferPlan:
+        """Source-side Wire planning: block-level dedup accounting shared
+        by capsule fetch, volunteer restore and edge prefetch.
 
-        -> (missing refs, bytes to move, bytes saved by dedup).  A client
-        that already holds a delta's parents downloads only the delta
-        record."""
+        Which of ``refs``'s delta closure a peer holding ``peer_has``
+        still needs, sized from this store.  A peer that already holds a
+        delta's parents downloads only the delta record."""
         needed = self.live_closure(refs)
-        missing = sorted(r for r in needed if r not in client_has)
+        missing = sorted(r for r in needed if r not in peer_has)
         moved = sum(self.object_size(r) for r in missing)
-        dedup = sum(self.object_size(r) for r in needed if r in client_has)
-        return missing, moved, dedup
+        dedup = sum(self.object_size(r) for r in needed if r in peer_has)
+        return TransferPlan(missing, moved, dedup)
 
-    # -- uplink (client -> server) -----------------------------------------
-    def export_records(self, refs: Iterable[str]) -> Dict[str, bytes]:
-        """Wire image of objects for an uplink push: ref -> packed bytes
-        (raw chunk bytes, or the packed delta record).  The receiving
-        store's ``ingest`` recomputes every hash, so the wire needs no
-        extra framing."""
+    def plan_recv(self, offered: Dict[str, int], *,
+                  client_id: Optional[str] = None) -> TransferPlan:
+        """Sink-side Wire planning: which of a client's offered objects
+        this store still needs (the uplink mirror of ``plan_send``).
+
+        ``offered`` maps ref -> wire size as measured by the *client's*
+        store (this store cannot size objects it does not hold yet).  The
+        moved figure is the client's claim and is for *planning only*;
+        credit-bearing ``bytes_in`` accumulates in ``recv`` from bytes
+        actually verified and written, so an inflated offer cannot mint
+        credit.  Dedup is sized from this store's own copies (it holds
+        them), so it is verified here."""
+        needed = sorted(r for r in offered if not self.has(r))
+        moved = sum(offered[r] for r in needed)
+        dedup = sum(self.object_size(r) for r in offered if self.has(r))
+        self.metrics.ingest_dedup_bytes.inc(dedup)
+        if client_id is not None:
+            self._client_log(client_id)["bytes_dedup"] += dedup
+        return TransferPlan(needed, moved, dedup)
+
+    # -- Wire: data movement -----------------------------------------------
+    def send(self, refs: Iterable[str]) -> Dict[str, bytes]:
+        """Wire image of objects: ref -> packed bytes (raw chunk bytes, or
+        the packed delta record).  The receiving endpoint's ``recv``
+        recomputes every hash, so the wire needs no extra framing.  Bytes
+        leaving this store count in ``egress_bytes`` — the primary-egress
+        figure the edge tier exists to shrink."""
         out: Dict[str, bytes] = {}
         for r in refs:
             if is_delta_ref(r):
                 out[r] = self._delta_bytes(r[len(DELTA_PREFIX):])
             else:
                 out[r] = self.get(r)
+        self.metrics.egress_bytes.inc(sum(len(b) for b in out.values()))
         return out
 
     def _client_log(self, client_id: str) -> Dict[str, int]:
@@ -425,31 +525,10 @@ class ChunkStore:
             client_id, {"bytes_in": 0, "bytes_dedup": 0, "records": 0,
                         "rejected": 0})
 
-    def ingest_plan(self, offered: Dict[str, int], *,
-                    client_id: Optional[str] = None
-                    ) -> tuple[List[str], int, int]:
-        """Uplink mirror of ``transfer_plan``: which of a client's offered
-        objects this store still needs.
-
-        ``offered`` maps ref -> wire size as measured by the *client's*
-        store (the server cannot size objects it does not hold yet).
-        -> (needed refs, bytes to move up, bytes saved by dedup).  The
-        moved figure is the client's claim and is for *planning only*;
-        credit-bearing ``bytes_in`` accumulates in ``ingest`` from bytes
-        the server actually verified and wrote, so an inflated offer
-        cannot mint credit.  Dedup is sized from this store's own copies
-        (it holds them), so it is verified here."""
-        needed = sorted(r for r in offered if not self.has(r))
-        moved = sum(offered[r] for r in needed)
-        dedup = sum(self.object_size(r) for r in offered if self.has(r))
-        self.metrics.ingest_dedup_bytes.inc(dedup)
-        if client_id is not None:
-            self._client_log(client_id)["bytes_dedup"] += dedup
-        return needed, moved, dedup
-
-    def ingest(self, records: Dict[str, bytes], *,
-               client_id: Optional[str] = None) -> int:
-        """Validate and store client-built objects (the uplink write path).
+    def recv(self, records: Dict[str, bytes], *,
+             client_id: Optional[str] = None) -> int:
+        """Validate and store peer-built objects (the Wire write path:
+        uplink push, replica delivery, edge demand-fill).
 
         Every ref is recomputed from the record bytes (content addressing
         doubles as integrity — a tampered upload cannot land under a valid
@@ -521,6 +600,30 @@ class ChunkStore:
             log["records"] += len(records)
             log["bytes_in"] += written    # verified bytes, not the claim
         return written
+
+    # -- deprecated pre-Wire names (thin shims) ----------------------------
+    def transfer_plan(self, refs: Iterable[str],
+                      client_has: set[str]) -> TransferPlan:
+        """Deprecated: use ``plan_send``."""
+        _warn_wire("ChunkStore.transfer_plan", "plan_send")
+        return self.plan_send(refs, client_has)
+
+    def ingest_plan(self, offered: Dict[str, int], *,
+                    client_id: Optional[str] = None) -> TransferPlan:
+        """Deprecated: use ``plan_recv``."""
+        _warn_wire("ChunkStore.ingest_plan", "plan_recv")
+        return self.plan_recv(offered, client_id=client_id)
+
+    def export_records(self, refs: Iterable[str]) -> Dict[str, bytes]:
+        """Deprecated: use ``send``."""
+        _warn_wire("ChunkStore.export_records", "send")
+        return self.send(refs)
+
+    def ingest(self, records: Dict[str, bytes], *,
+               client_id: Optional[str] = None) -> int:
+        """Deprecated: use ``recv``."""
+        _warn_wire("ChunkStore.ingest", "recv")
+        return self.recv(records, client_id=client_id)
 
     def wipe(self) -> None:
         """Simulated disk loss: drop every object (fault injection — the

@@ -88,7 +88,7 @@ class VolunteerTrainer:
                  uplink: bool = False,
                  uplink_chunk_bytes: int = DEFAULT_UPLINK_CHUNK,
                  uplink_mode: str = "auto",
-                 replicas=None,
+                 replicas=None, edge=None,
                  telemetry: Optional[tlm.Telemetry] = None):
         """grad_fn(params, batch)->(loss, grads); apply_fn(state, grads)->state.
 
@@ -116,7 +116,12 @@ class VolunteerTrainer:
         ``replicas``: a ``ReplicaSet`` whose primary backs the snapshot
         store.  Snapshot/uplink writes only *enqueue* on the hot path; the
         trainer pumps the outbox once per round, after the optimizer step
-        and snapshot complete, so peer I/O never blocks a round."""
+        and snapshot complete, so peer I/O never blocks a round.
+
+        ``edge``: an ``EdgeTier`` fronting the snapshot store.
+        ``restore_latest`` routes its download through edge discovery, so
+        a re-attach wave drains from the caches instead of the primary
+        (``last_restore_plan['route']`` records who served it)."""
         self.grad_fn = grad_fn
         self.apply_fn = apply_fn
         self.compress_grads = compress_grads
@@ -140,6 +145,7 @@ class VolunteerTrainer:
                                  "scheduler when a server is attached")
         self.sched = scheduler or VolunteerScheduler(clock=SimClock())
         self.replicas = replicas
+        self.edge = edge
         self.snapshots = snapshots
         self.snapshot_every = snapshot_every
         self.cursor = Cursor()
@@ -396,15 +402,30 @@ class VolunteerTrainer:
 
         ``client_hashes``: refs this volunteer already holds (e.g. from a
         previous attach).  When given, ``last_restore_plan`` records the
-        block-level download accounting — the same ``transfer_plan`` the
-        server's ``fetch_capsule`` uses, so a re-attaching volunteer
-        downloads only the delta objects written since it detached."""
+        block-level download accounting — the same ``plan_send`` (Wire)
+        the server's ``fetch_capsule`` uses, so a re-attaching volunteer
+        downloads only the delta objects written since it detached.  With
+        an ``edge`` tier attached the download routes through discovery
+        and ``last_restore_plan['route']`` names the serving member."""
         if client_hashes is not None:
-            missing, moved, dedup = self.snapshots.download_plan(
-                client_hashes)
+            if self.edge is not None:
+                self.snapshots.wait()
+                sid = self.snapshots.latest()
+                if sid is None:
+                    raise ValueError("no snapshots available")
+                refs = self.snapshots.get_manifest(sid).all_refs()
+                res = self.edge.fetch(refs, client_hashes)
+                missing, moved, dedup = (res.missing, res.bytes_moved,
+                                         res.bytes_dedup)
+                route = res.route
+            else:
+                missing, moved, dedup = self.snapshots.download_plan(
+                    client_hashes)
+                route = "origin"
             self.last_restore_plan = {"missing": len(missing),
                                       "bytes_moved": moved,
-                                      "bytes_dedup": dedup}
+                                      "bytes_dedup": dedup,
+                                      "route": route}
         state, aux = self.snapshots.restore(target_tree=abstract_state)
         self.state = state
         self.cursor = Cursor.from_state(aux["cursor"])

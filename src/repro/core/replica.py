@@ -4,9 +4,9 @@ The paper's V-BOINC server is a single trusted node: every capsule fetch
 and result upload flows through one ChunkStore, so one disk loss destroys
 every snapshot chain.  Volunteer fleets have enormous *storage* capacity
 (Anderson & Fedak), and PRs 1+4 already give us a verified, dedup-aware
-object protocol in both directions (``transfer_plan`` down,
-``export_records``/``ingest`` up) — a ``ReplicaSet`` fans every primary
-write out over exactly that machinery so any peer can take over.
+object protocol in both directions (the ``Wire`` verbs: ``plan_send``/
+``send`` down, ``plan_recv``/``recv`` up) — a ``ReplicaSet`` fans every
+primary write out over exactly that machinery so any peer can take over.
 
 Design:
 
@@ -14,16 +14,16 @@ Design:
   to the primary and append the new ref to a *bounded outbox*; the
   snapshot hot path never blocks on a peer (enqueue is O(1), no peer I/O).
   ``pump`` drains the outbox off the hot path: each ref's chain closure is
-  exported from the primary and ``ingest``-ed by every alive peer that
+  exported from the primary (``send``) and ``recv``-ed by every alive peer that
   lacks any of it, so every replica re-hashes every record and validates
   chain depths — a corrupt primary cannot poison its peers.  Delivery is
   pluggable (``transport``) so the churn simulator can drop, delay and
   reorder messages deterministically; messages are self-contained chain
-  closures, so redelivery and reordering are safe (ingest is idempotent).
+  closures, so redelivery and reordering are safe (recv is idempotent).
 * **Read repair** — when ``resolve``/``get`` on the primary hits a
   missing or torn object (integrity = re-hash on read), the chain is
   healed in place from the first peer that can serve it: the packed
-  records travel through ``ingest``, which re-verifies every hash and
+  records travel through ``recv``, which re-verifies every hash and
   chain depth before anything lands.
 * **Failover** — ``promote`` redesignates any alive member as primary;
   the set keeps presenting the ChunkStore interface, so a
@@ -51,7 +51,9 @@ from collections import deque
 from typing import Callable, Dict, Iterable, List, Optional
 
 from repro.core import telemetry as tlm
-from repro.core.chunkstore import (DELTA_PREFIX, ChunkStore, is_delta_ref)
+from repro.core.chunkstore import (DELTA_PREFIX, ChunkStore, _warn_wire,
+                                   is_delta_ref)
+from repro.core.membership import Membership
 
 DEFAULT_OUTBOX_LIMIT = 4096
 
@@ -59,7 +61,7 @@ DEFAULT_OUTBOX_LIMIT = 4096
 Transport = Callable[[int, Dict[str, bytes]], bool]
 
 
-class ReplicaSet:
+class ReplicaSet(Membership):
     """N chunk stores presenting one ChunkStore-shaped interface.
 
     ``members[primary_index]`` serves reads and takes writes; every write
@@ -67,15 +69,18 @@ class ReplicaSet:
     outbox.  Unknown attributes delegate to the current primary, so
     ``SnapshotManager``/``VBoincServer``/``push_update`` code written
     against ``ChunkStore`` runs unchanged against a ``ReplicaSet``.
+    Membership verbs (``mark_down``/``mark_up``/``remove``/``promote``)
+    come from the shared :class:`Membership` mixin — the same interface
+    ``ChurnSim`` drives the edge-cache tier through — with the
+    replica-specific bookkeeping (parked refs, promotion metrics) in the
+    ``_on_*`` hooks.
     """
 
     def __init__(self, primary: ChunkStore, peers: Iterable[ChunkStore] = (),
                  *, outbox_limit: int = DEFAULT_OUTBOX_LIMIT,
                  transport: Optional[Transport] = None,
                  telemetry: Optional[tlm.Telemetry] = None):
-        self.members: List[ChunkStore] = [primary, *peers]
-        self.primary_index = 0
-        self._down: set[int] = set()
+        self._init_membership([primary, *peers])
         self.outbox: deque[str] = deque()
         self.outbox_limit = int(outbox_limit)
         self.transport = transport
@@ -112,15 +117,14 @@ class ReplicaSet:
         return [(i, m) for i, m in enumerate(self.members)
                 if i != self.primary_index and i not in self._down]
 
-    def mark_down(self, index: int) -> None:
-        self._down.add(index)
+    # Membership hooks: the verbs themselves live on the shared mixin
+    def _on_down(self, index: int) -> None:
         if self.tel.tracing:
             self.tel.event("member_down", member=index)
 
-    def mark_up(self, index: int) -> None:
-        """Bring a member back; refs parked for it during the outage
-        re-enter the outbox and ship on the next pump."""
-        self._down.discard(index)
+    def _on_up(self, index: int) -> None:
+        """Refs parked for the member during its outage re-enter the
+        outbox and ship on the next pump."""
         if self.tel.tracing:
             self.tel.event("member_up", member=index)
         with self._lock:
@@ -130,32 +134,16 @@ class ReplicaSet:
                     self.outbox.popleft()
                     self.rmetrics.outbox_dropped.inc()
 
-    def remove(self, index: int) -> None:
-        """Permanently drop a member (a volunteer that will never return),
-        so pumps stop deferring refs for it.  The primary cannot be
-        removed — promote a survivor first."""
-        if index == self.primary_index:
-            raise ValueError("cannot remove the primary; promote first")
-        if not 0 <= index < len(self.members):
-            raise IndexError(f"no member {index}")
-        del self.members[index]
-        self._down = {i - (i > index) for i in self._down if i != index}
+    def _on_remove(self, index: int) -> None:
+        """Pumps stop deferring refs for a member that will never
+        return (``index`` is its pre-removal slot)."""
         self._parked = {i - (i > index): q
                         for i, q in self._parked.items() if i != index}
-        if self.primary_index > index:
-            self.primary_index -= 1
 
-    def promote(self, index: int) -> None:
-        """Redesignate an alive member as primary (failover)."""
-        if not 0 <= index < len(self.members):
-            raise IndexError(f"no member {index} to promote")
-        if index in self._down:
-            raise ValueError(f"cannot promote member {index}: marked down")
-        if index != self.primary_index:
-            self.primary_index = index
-            self.rmetrics.promotions.inc()
-            if self.tel.tracing:
-                self.tel.event("promote", member=index)
+    def _on_promote(self, index: int) -> None:
+        self.rmetrics.promotions.inc()
+        if self.tel.tracing:
+            self.tel.event("promote", member=index)
 
     def promote_best(self) -> int:
         """Promote the alive member holding the most objects (deterministic
@@ -229,14 +217,21 @@ class ReplicaSet:
         self._enqueue(ref)
         return ref
 
-    def ingest(self, records: Dict[str, bytes], *,
-               client_id: Optional[str] = None) -> int:
+    def recv(self, records: Dict[str, bytes], *,
+             client_id: Optional[str] = None) -> int:
         """Uplink writes replicate too: validated records land on the
         primary and their refs join the outbox."""
-        written = self.primary.ingest(records, client_id=client_id)
+        written = self.primary.recv(records, client_id=client_id)
         for r in records:
             self._enqueue(r)
         return written
+
+    def ingest(self, records: Dict[str, bytes], *,
+               client_id: Optional[str] = None) -> int:
+        """Deprecated: use ``recv``.  (Defined here, not delegated: the
+        primary's shim would skip the replication enqueue.)"""
+        _warn_wire("ReplicaSet.ingest", "recv")
+        return self.recv(records, client_id=client_id)
 
     # -- read path with read-repair ----------------------------------------
     def get(self, ref: str) -> bytes:
@@ -286,14 +281,14 @@ class ReplicaSet:
             bad = sorted(r for r in closure
                          if not self._intact(self.primary, r))
             try:
-                records = peer.export_records(bad)
+                records = peer.send(bad)
             except (OSError, KeyError):
                 continue                     # peer torn too; try the next
             for r in bad:                    # drop torn copies first so the
                 if self.primary.has(r):      # ingest dedup re-writes them
                     self.primary.delete(r)
             try:
-                self.primary.ingest(records)
+                self.primary.recv(records)
             except (OSError, KeyError):
                 continue
             self.rmetrics.repaired.inc(len(bad))
@@ -325,7 +320,7 @@ class ReplicaSet:
             return False
         self._apply_deferred_gc()
         try:
-            self.members[peer_index].ingest(records)
+            self.members[peer_index].recv(records)
         except (OSError, KeyError):
             return False
         return True
@@ -386,7 +381,7 @@ class ReplicaSet:
                 records = {}
                 if union:
                     try:
-                        records = self.primary.export_records(sorted(union))
+                        records = self.primary.send(sorted(union))
                     except (OSError, KeyError):
                         retry.append(ref)
                         continue
@@ -445,7 +440,7 @@ class ReplicaSet:
         records: Dict[str, bytes] = {}
         for r in sorted(union):
             try:
-                records.update(self.primary.export_records([r]))
+                records.update(self.primary.send([r]))
             except (OSError, KeyError):
                 continue                     # torn locally; skip
         moved = 0

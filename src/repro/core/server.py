@@ -5,9 +5,11 @@ answers DepDisk probes: the V-BOINC client asks whether a project has
 dependencies (1.1), downloads the DepDisk if so, otherwise creates a fresh
 one locally (3).  Transfer accounting reproduces the paper's bandwidth story
 (207 MB compressed image / ~3 min at 9 Mbps → bytes-moved metrics here):
-``fetch_capsule`` runs the same block-level ``transfer_plan`` dedup as a
+``fetch_capsule`` runs the same block-level ``plan_send`` (Wire) dedup as a
 volunteer's restore, so a re-attaching client moves only the missing blocks
-— typically just the delta objects written since it detached.
+— typically just the delta objects written since it detached.  With an
+``EdgeTier`` attached (``attach_edge``), fetches route through the edge
+discovery service and drain from delta caches instead of this store.
 """
 from __future__ import annotations
 
@@ -46,6 +48,9 @@ class TransferLog:
     bytes_out: int = 0
     bytes_dedup: int = 0
     requests: int = 0
+    # route -> serve count ("origin", "dedup", or an edge-cache id) when
+    # an edge tier is attached; empty otherwise
+    routes: Dict[str, int] = field(default_factory=dict)
 
 
 @dataclass
@@ -60,13 +65,25 @@ class VBoincServer:
     """Registry + distribution endpoint ("modified BOINC server")."""
 
     def __init__(self, store: ChunkStore, *,
-                 telemetry: Optional[tlm.Telemetry] = None):
+                 telemetry: Optional[tlm.Telemetry] = None,
+                 edge=None):
         self.store = store
         self.tel = tlm.resolve(telemetry)
         self.projects: Dict[str, Project] = {}
         self.transfers: Dict[str, TransferLog] = {}
         self.uplinks: Dict[str, UplinkLog] = {}   # per-project uplink log
         self.account_keys: Dict[str, str] = {}    # weak account keys
+        self.edge = None
+        if edge is not None:
+            self.attach_edge(edge)
+
+    def attach_edge(self, edge) -> None:
+        """Front capsule distribution with an ``EdgeTier``: every
+        ``fetch_capsule`` routes through its discovery service, so cold
+        re-attach waves drain from the caches instead of this store."""
+        if edge.origin is not self.store:
+            raise ValueError("edge tier must front the server's chunk store")
+        self.edge = edge
 
     def publish(self, project: Project) -> None:
         # fetch_capsule resolves snapshot refs against the SERVER's store
@@ -100,9 +117,12 @@ class VBoincServer:
         Returns (spec, missing refs, bytes transferred).  The needed set is
         the capsule manifest plus the project's latest snapshot blocks (when
         a snapshot chain is attached), expanded over delta parents — the
-        same ``ChunkStore.transfer_plan`` accounting a volunteer's
+        same ``ChunkStore.plan_send`` (Wire) accounting a volunteer's
         ``restore_latest`` uses, so a re-attaching client downloads only the
-        delta objects written since it detached."""
+        delta objects written since it detached.  With an edge tier
+        attached the fetch routes through discovery (``TransferLog.routes``
+        records who served it); the plan — and therefore the restored
+        bytes — is identical either way."""
         if account_key not in self.account_keys.values():
             raise PermissionError("unknown account key")
         proj = self.projects[project]
@@ -112,7 +132,13 @@ class VBoincServer:
         if proj.snapshots is not None and proj.snapshots.latest():
             man = proj.snapshots.get_manifest(proj.snapshots.latest())
             needed += man.all_refs()
-        missing, moved, dedup = self.store.transfer_plan(needed,
+        if self.edge is not None:
+            res = self.edge.fetch(needed, client_hashes)
+            missing, moved, dedup = res.missing, res.bytes_moved, \
+                res.bytes_dedup
+            log.routes[res.route] = log.routes.get(res.route, 0) + 1
+        else:
+            missing, moved, dedup = self.store.plan_send(needed,
                                                          client_hashes)
         log.bytes_out += moved
         log.bytes_dedup += dedup
@@ -129,7 +155,7 @@ class VBoincServer:
 
         With ``update`` the volunteer streams its quantized gradient/state
         delta through the chunk store instead of reporting a bare hash:
-        only objects the server lacks move up (``ingest_plan``), every
+        only objects the server lacks move up (``plan_recv``), every
         record is re-hashed, and the full chain is resolved before the
         result counts — a corrupt or dangling upload is rejected without
         touching the scheduler.  When the unit's quorum is met, the

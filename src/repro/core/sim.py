@@ -11,7 +11,12 @@ The same driver also churns the *scheduler plane*: constructed with
 scripted (``kill_shard``) or seeded (``random_shard_kill``) — so the
 shard-failover path (key-range reassignment + open-unit migration) is
 exercised by the exact deterministic machinery that already drives
-replica failover.  A sim may drive replicas, shards, or both.
+replica failover.  With ``edges=`` (an ``EdgeTier``) it churns the
+edge-cache tier through the same shared ``Membership`` verbs:
+``kill_cache``/``revive_cache`` (optionally *stale* — the cache comes
+back empty and must demand-fill before serving) and seeded
+``random_cache_kill``.  A sim may drive any combination of the three
+planes.
 
 Two instruments make the fault-injection suite's assertions possible:
 
@@ -20,7 +25,8 @@ Two instruments make the fault-injection suite's assertions possible:
   applied, then delivered (optionally in scrambled order) at an explicit
   ``deliver`` step.  ``drop(n)`` discards the next n sends, exercising the
   retry path; down members black-hole their messages.
-* **step accounting** — every member's ``ingest`` is wrapped to log
+* **step accounting** — every member's ``recv`` (Wire sink verb) is
+  wrapped to log
   ``(step, phase, member, primary_at_the_time, records)``.  Scripted steps
   run in a named phase ("hot" for snapshot/training work, "net" for
   pump/deliver, "fault" for churn events), so a test can assert that *no
@@ -42,12 +48,15 @@ class ChurnSim:
     """Scripted, seedable kill/revive/drop/reorder driver for a ReplicaSet."""
 
     def __init__(self, replicas: Optional[ReplicaSet] = None, seed: int = 0,
-                 *, shards=None, telemetry: Optional[tlm.Telemetry] = None,
+                 *, shards=None, edges=None,
+                 telemetry: Optional[tlm.Telemetry] = None,
                  dump_on_fault: Optional[Path] = None):
-        if replicas is None and shards is None:
-            raise ValueError("ChurnSim needs replicas= and/or shards=")
+        if replicas is None and shards is None and edges is None:
+            raise ValueError(
+                "ChurnSim needs replicas=, shards= and/or edges=")
         self.replicas = replicas
         self.shards = shards           # a ShardedScheduler (or None)
+        self.edges = edges             # an EdgeTier (or None)
         # the flight-recorder hook: dump the hub's ring to
         # <dump_on_fault>/fault-<step>-<kind>.jsonl after every fault step
         self.tel = tlm.resolve(telemetry)
@@ -68,16 +77,18 @@ class ChurnSim:
 
     # -- instrumentation ---------------------------------------------------
     def _instrument(self) -> None:
+        # wrap the Wire sink verb on each member *instance*; the deprecated
+        # ingest shim calls self.recv, so shimmed callers are logged too
         for idx, member in enumerate(self.replicas.members):
-            member.ingest = self._wrap_ingest(idx, member.ingest)
+            member.recv = self._wrap_recv(idx, member.recv)
 
-    def _wrap_ingest(self, idx: int, orig: Callable) -> Callable:
-        def ingest(records, *, client_id=None):
+    def _wrap_recv(self, idx: int, orig: Callable) -> Callable:
+        def recv(records, *, client_id=None):
             self.ingest_log.append((self.step, self.phase, idx,
                                     self.replicas.primary_index,
                                     len(records)))
             return orig(records, client_id=client_id)
-        return ingest
+        return recv
 
     def _transport(self, peer_index: int, records: Dict[str, bytes]) -> bool:
         if peer_index in self.replicas._down:
@@ -213,6 +224,49 @@ class ChurnSim:
             return None
         index = int(alive[self.rng.integers(len(alive))])
         self.kill_shard(index)
+        return index
+
+    # -- edge-cache churn --------------------------------------------------
+    def _need_edges(self):
+        if self.edges is None:
+            raise RuntimeError("this step needs edges=; the sim was built "
+                               "without an EdgeTier")
+        return self.edges
+
+    def kill_cache(self, index: int, wipe: bool = False) -> None:
+        """Kill edge cache ``index``: it drops out of discovery rankings
+        immediately; ``wipe`` simulates disk loss as well."""
+        edges = self._need_edges()
+        self._tick("fault")
+        edges.mark_down(index)
+        if wipe:
+            edges.members[index].invalidate()
+        self._log("kill_cache", (index, wipe))
+        self._dump_fault("kill_cache")
+        self.phase = "idle"
+
+    def revive_cache(self, index: int, stale: bool = False) -> None:
+        """Revive edge cache ``index``.  ``stale`` drops its contents
+        first — the cache re-enters rankings at zero coverage and must
+        demand-fill before serving (the stale-cache churn case)."""
+        edges = self._need_edges()
+        self._tick("fault")
+        if stale:
+            edges.members[index].invalidate()
+        edges.mark_up(index)
+        self._log("revive_cache", (index, stale))
+        self._dump_fault("revive_cache")
+        self.phase = "idle"
+
+    def random_cache_kill(self) -> Optional[int]:
+        """Kill a seeded-random alive edge cache; -> the killed index, or
+        None when no cache is alive."""
+        edges = self._need_edges()
+        alive = edges.alive_indices()
+        if not alive:
+            return None
+        index = int(alive[self.rng.integers(len(alive))])
+        self.kill_cache(index)
         return index
 
     def settle(self, max_rounds: int = 32) -> None:

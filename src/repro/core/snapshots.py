@@ -494,14 +494,14 @@ class SnapshotManager:
         """Block-level transfer accounting for a re-attaching volunteer.
 
         -> (missing refs, bytes to move, bytes saved) for the given (or
-        latest) snapshot — the same ``ChunkStore.transfer_plan`` the
+        latest) snapshot — the same ``ChunkStore.plan_send`` (Wire) the
         server's ``fetch_capsule`` uses."""
         self.wait()
         sid = snapshot_id or (self.order[-1] if self.order else None)
         if sid is None:
             raise ValueError("no snapshots available")
-        return self.store.transfer_plan(self.get_manifest(sid).all_refs(),
-                                        client_refs)
+        return self.store.plan_send(self.get_manifest(sid).all_refs(),
+                                    client_refs)
 
     # ------------------------------------------------------------------
     def _trim_manifests(self) -> None:

@@ -1,6 +1,6 @@
 """Delta-aware volunteer uplink: quantized round updates as store objects.
 
-PR 1 made the *downlink* pay only changed blocks (``transfer_plan``); this
+PR 1 made the *downlink* pay only changed blocks (``plan_send``); this
 module closes the loop for the uplink.  A volunteer's per-round
 gradient/optimizer update is first quantized to int8 with per-block scales
 (``optim/grad_compress`` — the dense wire format), then the quantized byte
@@ -17,10 +17,13 @@ Protocol (in-process analogue of the two-round-trip wire exchange):
 1. client ``encode()`` writes the round's objects into its *local* store
    and returns an ``UplinkUpdate`` (refs + leaf metadata + a handle to
    that store);
-2. server ``ingest_plan`` answers which refs it lacks (per-client dedup:
+2. server ``plan_recv`` answers which refs it lacks (per-client dedup:
    two volunteers pushing the same zero-chunk move it once);
-3. client ``export_records`` ships exactly those; server ``ingest``
-   re-hashes every record and refuses dangling chains.
+3. client ``send`` ships exactly those; server ``recv`` re-hashes every
+   record and refuses dangling chains.
+
+Both directions speak the unified ``Wire`` protocol
+(``plan_send``/``plan_recv``/``send``/``recv`` in ``core/chunkstore``).
 
 ``decode_update`` is the server-side fold: resolve each ref chain back to
 the quantized image and rebuild the ``Compressed`` leaves — the canonical
@@ -152,15 +155,15 @@ def push_update(update: UplinkUpdate, server_store: ChunkStore, *,
 
     -> (bytes moved up, bytes saved by dedup).  Raises ``IOError`` when a
     record fails validation (nothing is written).  Moved bytes come from
-    ``ingest``'s server-verified count, never the client's offered sizes,
+    ``recv``'s server-verified count, never the client's offered sizes,
     so the accounting the scheduler credits cannot be inflated."""
     closure = update.store.live_closure(update.all_refs())
     offered = {r: update.store.object_size(r) for r in closure}
-    needed, _, dedup = server_store.ingest_plan(offered,
-                                                client_id=client_id)
+    needed, _, dedup = server_store.plan_recv(offered,
+                                              client_id=client_id)
     try:
-        moved = server_store.ingest(update.store.export_records(needed),
-                                    client_id=client_id)
+        moved = server_store.recv(update.store.send(needed),
+                                  client_id=client_id)
     except Exception:
         # nothing landed: claw the planned dedup back out of the client's
         # credit accounting and mark the rejection

@@ -85,6 +85,12 @@ def main(argv=None) -> dict:
                     help="delta-aware upload path: volunteers stream "
                          "quantized gradient deltas through the server's "
                          "chunk store; only changed blocks move up")
+    ap.add_argument("--edge-caches", type=int, default=0,
+                    help="edge delta caches fronting the snapshot store; "
+                         "restore_latest routes through their discovery "
+                         "service instead of the primary")
+    ap.add_argument("--edge-capacity", type=int, default=1 << 28,
+                    help="per-cache capacity in bytes (LRU by closure)")
     ap.add_argument("--replicas", type=int, default=0,
                     help="replicate snapshot chains to N peer stores "
                          "(async, bounded outbox); the run survives a "
@@ -164,6 +170,17 @@ def main(argv=None) -> dict:
         sched = VolunteerScheduler(replication=args.replication,
                                    quorum=args.quorum, deadline_s=30.0,
                                    clock=clock)
+    edge = None
+    if args.edge_caches > 0:
+        from repro.core.edge import EdgeCache, EdgeTier
+        # read-only delta caches fronting the snapshot store: the
+        # trainer's restore path drains from their discovery service, and
+        # they earn scheduler transfer credit for the bytes they serve
+        edge = EdgeTier(store,
+                        [EdgeCache(f"edge-{i}",
+                                   capacity_bytes=args.edge_capacity)
+                         for i in range(args.edge_caches)],
+                        scheduler=sched)
     state = api.TrainState(init_tree(specs.params, jax.random.key(args.seed)),
                            init_tree(specs.opt, jax.random.key(args.seed)))
 
@@ -184,7 +201,7 @@ def main(argv=None) -> dict:
         snapshot_every=args.snapshot_every, seed=args.seed,
         compress_grads=args.compress_grads,
         server=server, project="train" if server else None,
-        uplink=args.uplink, replicas=replicas)
+        uplink=args.uplink, replicas=replicas, edge=edge)
 
     start_step = 0
     if args.resume:
@@ -251,6 +268,9 @@ def main(argv=None) -> dict:
         replicas.flush()             # durability: drain the outbox on exit
         summary["replication"] = {**dict(replicas.rstats),
                                   **replicas.replication_report()}
+    if edge is not None:
+        summary["edge"] = {**{k: int(v) for k, v in dict(edge.stats).items()},
+                           "caches": edge.describe()}
     if server is not None:
         log = server.uplinks.get("train")
         hist = trainer.history

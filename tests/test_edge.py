@@ -1,0 +1,365 @@
+"""Edge capsule distribution: discovery, caches, churn, Wire shims.
+
+Covers the PR-9 acceptance surface:
+
+* discovery ranking (coverage / load / RTT / preferred) and its churn
+  behaviour — a killed cache drops out, a stale revive demand-fills
+  before serving, same-seed runs pick byte-identical routes;
+* LRU-by-closure eviction (whole closures, never a torn chain);
+* routing through ``VBoincServer.fetch_capsule`` and
+  ``VolunteerTrainer.restore_latest`` with byte-identical accounting;
+* the shared ``Membership`` mixin driving both planes;
+* the deprecated ``transfer_plan``/``ingest_plan``/``export_records``/
+  ``ingest`` shims: they warn and delegate to the Wire verbs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import telemetry as tlm
+from repro.core.chunkstore import ChunkStore, TransferPlan, Wire
+from repro.core.edge import (EdgeCache, EdgeTier, FetchResult, closure_key,
+                             simulated_rtt_ms)
+from repro.core.elastic import Cursor, VolunteerTrainer
+from repro.core.replica import ReplicaSet
+from repro.core.scheduler import SimClock, VolunteerScheduler
+from repro.core.sim import ChurnSim
+from repro.core.snapshots import SnapshotManager
+
+CHUNK = 1 << 12
+
+
+def _capsule(chunks: int = 6, seed: int = 0):
+    """Origin store holding raw base chunks + a short delta chain."""
+    rng = np.random.default_rng(seed)
+    store = ChunkStore(chunk_bytes=CHUNK)
+    base = rng.integers(0, 256, size=chunks * CHUNK, dtype=np.uint8)
+    refs = store.put_buffer(memoryview(base))
+    xor = np.zeros(CHUNK, np.uint8)
+    xor[3] = 7
+    refs[0] = store.put_delta(refs[0], xor.tobytes())
+    return store, refs
+
+
+def _tier(caches: int = 3, *, prefetch: bool = True, chunks: int = 6,
+          scheduler=None, telemetry=None):
+    origin, refs = _capsule(chunks)
+    tier = EdgeTier(origin, [EdgeCache(f"edge-{i}") for i in range(caches)],
+                    scheduler=scheduler, telemetry=telemetry)
+    if prefetch:
+        tier.prefetch(refs, base_only=False)
+    return origin, refs, tier
+
+
+# ---------------------------------------------------------------------------
+# discovery ranking
+# ---------------------------------------------------------------------------
+def test_discover_ranks_by_coverage_then_load_then_rtt():
+    origin, refs, tier = _tier(3)
+    plan = origin.plan_send(refs, set())
+    ranked = [i for i, _ in tier.discover(plan.refs)]
+    # all full coverage + zero load: RTT (then preferred/index) decides,
+    # and the order is a pure function of the cache ids
+    rtts = [tier.members[i].rtt_ms for i in ranked]
+    assert rtts == sorted(rtts)
+    # serving bumps load: the busy cache falls behind an idle equal peer
+    first = ranked[0]
+    tier.members[first].serve(plan.refs)
+    tier.members[first].serve(plan.refs)
+    assert tier.discover(plan.refs)[0][0] != first
+
+
+def test_discover_prefers_coverage_over_everything():
+    origin, refs, tier = _tier(2, prefetch=False)
+    plan = origin.plan_send(refs, set())
+    tier.members[1].fill_from(origin, plan.refs)   # only cache 1 is warm
+    assert tier.discover(plan.refs)[0][0] == 1
+
+
+def test_killed_cache_drops_out_of_rankings():
+    origin, refs, tier = _tier(3)
+    plan = origin.plan_send(refs, set())
+    sim = ChurnSim(seed=1, edges=tier)
+    killed = sim.random_cache_kill()
+    assert killed is not None
+    assert killed not in [i for i, _ in tier.discover(plan.refs)]
+    sim.revive_cache(killed)
+    assert killed in [i for i, _ in tier.discover(plan.refs)]
+
+
+def test_stale_revive_demand_fills_before_serving():
+    origin, refs, tier = _tier(2)
+    plan = origin.plan_send(refs, set())
+    sim = ChurnSim(seed=3, edges=tier)
+    sim.kill_cache(0)
+    sim.revive_cache(0, stale=True)       # back, but empty
+    assert not tier.members[0].can_serve(plan.refs)
+    sim.kill_cache(1)                     # isolate the stale cache
+    fills = tier.stats["fills"]
+    res = tier.fetch(refs, set())
+    assert res.route == "edge-0"
+    assert tier.stats["fills"] == fills + 1       # filled, then served
+    assert tier.members[0].can_serve(plan.refs)
+    # warm now: the next fetch is a hit, no further origin egress
+    egress = tier.stats["origin_egress_bytes"]
+    tier.fetch(refs, set())
+    assert tier.stats["origin_egress_bytes"] == egress
+
+
+def _route_script(seed: int) -> list[str]:
+    origin, refs, tier = _tier(3)
+    sim = ChurnSim(seed=seed, edges=tier)
+    routes = [tier.fetch(refs, set()).route]
+    killed = sim.random_cache_kill()
+    routes.append(tier.fetch(refs, set()).route)
+    sim.revive_cache(killed, stale=True)
+    for i in tier.alive_indices():
+        if i != killed:
+            sim.kill_cache(i)
+    routes.append(tier.fetch(refs, set()).route)
+    return routes
+
+
+@pytest.mark.parametrize("seed", [7, 19, 42])
+def test_same_seed_runs_pick_byte_identical_routes(seed):
+    assert _route_script(seed) == _route_script(seed)
+
+
+# ---------------------------------------------------------------------------
+# fetch routing + accounting
+# ---------------------------------------------------------------------------
+def test_fetch_is_byte_identical_and_dedup_aware():
+    origin, refs, tier = _tier(2)
+    client = ChunkStore(chunk_bytes=CHUNK)
+    res = tier.fetch(refs, set(), client_store=client)
+    assert res.route.startswith("edge-")
+    assert client.resolve_buffer(refs) == origin.resolve_buffer(refs)
+    # identical plan accounting to the no-edge path
+    plan = origin.plan_send(refs, set())
+    assert (res.missing, res.bytes_moved, res.bytes_dedup) == tuple(plan)
+    # a client already holding everything needs nothing: dedup short-cut
+    res2 = tier.fetch(refs, set(client.all_refs()))
+    assert res2.route == "dedup" and res2.bytes_moved == 0
+
+
+def test_fetch_falls_back_to_origin_when_no_cache_alive():
+    origin, refs, tier = _tier(2)
+    sim = ChurnSim(seed=0, edges=tier)
+    sim.kill_cache(0)
+    sim.kill_cache(1)
+    res = tier.fetch(refs, set())
+    assert res.route == "origin"
+    assert tier.stats["origin_egress_bytes"] >= res.bytes_moved
+
+
+def test_fetch_earns_credit_for_the_serving_cache():
+    sched = VolunteerScheduler()
+    origin, refs, tier = _tier(2, scheduler=sched)
+    res = tier.fetch(refs, set())
+    info = sched.workers[res.route]
+    assert info.uplink_bytes == res.bytes_moved
+    assert info.credit > 0
+
+
+def test_fetch_route_trace_events():
+    tel = tlm.Telemetry(tracing=True, clock=SimClock())
+    origin, refs, tier = _tier(2, telemetry=tel)
+    res = tier.fetch(refs, set())
+    ev = [e for e in tel.events if e.get("kind") == "fetch_route"]
+    assert ev and ev[-1]["route"] == res.route
+    assert ev[-1]["bytes"] == res.bytes_moved
+
+
+def test_fetch_result_unpacks_like_legacy_tuple():
+    res = FetchResult(["a"], 10, 3, "origin")
+    missing, moved, dedup = res
+    assert (missing, moved, dedup) == (["a"], 10, 3)
+    assert len(res) == 3 and res[1] == 10
+
+
+# ---------------------------------------------------------------------------
+# cache internals: LRU by closure, prefetch
+# ---------------------------------------------------------------------------
+def test_lru_evicts_whole_closures_never_tearing_chains():
+    origin = ChunkStore(chunk_bytes=CHUNK)
+    closures = []
+    rng = np.random.default_rng(9)
+    for i in range(3):
+        data = rng.integers(0, 256, size=2 * CHUNK, dtype=np.uint8)
+        refs = origin.put_buffer(memoryview(data))
+        xor = np.zeros(CHUNK, np.uint8)
+        xor[i] = 1
+        refs[0] = origin.put_delta(refs[0], xor.tobytes())
+        closures.append(refs)
+    nbytes = sum(origin.object_size(r)
+                 for r in origin.live_closure(closures[0]))
+    cache = EdgeCache("tiny", capacity_bytes=int(nbytes * 2.5))
+    for refs in closures:
+        cache.fill_from(origin, refs)
+    # capacity fits ~2 closures: the oldest was evicted whole
+    assert not any(cache.store.has(r) for r in closures[0])
+    for refs in closures[1:]:
+        assert cache.can_serve(origin.live_closure(refs))
+        # a served chain must still resolve — no torn deltas
+        assert (cache.store.resolve_buffer(refs)
+                == origin.resolve_buffer(refs))
+
+
+def test_prefetch_base_only_skips_delta_chains():
+    origin, refs, tier = _tier(2, prefetch=False)
+    moved = tier.prefetch(refs, base_only=True)
+    assert moved > 0
+    cache = tier.members[0]
+    raw = [r for r in refs[1:]]               # refs[0] is the delta head
+    assert all(cache.store.has(r) for r in raw)
+    assert not cache.store.has(refs[0])
+    assert tier.stats["prefetch_bytes"] == moved
+
+
+def test_closure_key_and_rtt_are_stable():
+    assert closure_key(["b", "a"]) == closure_key(["a", "b", "a"])
+    assert simulated_rtt_ms("edge-0") == simulated_rtt_ms("edge-0")
+    assert 5 <= simulated_rtt_ms("anything") < 55
+
+
+# ---------------------------------------------------------------------------
+# server + trainer routing
+# ---------------------------------------------------------------------------
+def _published_server(store, edge=None):
+    from repro.core.capsule import CapsuleSpec
+    from repro.core.server import Project, VBoincServer
+    from repro.models.lm import RunConfig
+
+    server = VBoincServer(store, edge=edge)
+    spec = CapsuleSpec("granite-3-2b", "train_4k", RunConfig())
+    server.publish(Project("p", spec))
+    key = server.register_user("vol")
+    return server, key
+
+
+def test_server_fetch_capsule_routes_through_edge():
+    store = ChunkStore(chunk_bytes=CHUNK)
+    plain, key = _published_server(store)
+    spec0, missing0, moved0 = plain.fetch_capsule("p", set(), key)
+
+    edge = EdgeTier(store, [EdgeCache("edge-0"), EdgeCache("edge-1")])
+    edged, key = _published_server(store, edge=edge)
+    spec, missing, moved = edged.fetch_capsule("p", set(), key)
+    # identical plan accounting, different egress meter
+    assert (missing, moved) == (missing0, moved0)
+    log = edged.transfers["p"]
+    assert sum(log.routes.values()) == 1
+    (route,) = log.routes
+    assert route.startswith("edge-")
+
+
+def test_server_rejects_foreign_edge_tier():
+    from repro.core.server import VBoincServer
+    tier = EdgeTier(ChunkStore(), [EdgeCache("x")])
+    with pytest.raises(ValueError):
+        VBoincServer(ChunkStore(), edge=tier)
+
+
+def test_trainer_restore_latest_routes_through_edge():
+    store = ChunkStore(chunk_bytes=CHUNK)
+    mgr = SnapshotManager(store, keep_last=10)
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal(20_000).astype(np.float32)
+    early_refs: set = set()
+    for i in range(3):
+        x = x.copy()
+        x[i] = np.float32(i + 1)
+        mgr.snapshot({"params": x}, step=i,
+                     aux={"cursor": Cursor(next_index=i + 1).to_state(),
+                          "round": i})
+        if i == 0:
+            early_refs = set(mgr.manifests[mgr.order[-1]].all_refs())
+    tier = EdgeTier(store, [EdgeCache("edge-0"), EdgeCache("edge-1")])
+    tr = VolunteerTrainer(grad_fn=None, apply_fn=None, state=None,
+                          stream=None, micro_batches=1, snapshots=mgr,
+                          edge=tier)
+    next_step = tr.restore_latest({"params": np.zeros_like(x)},
+                                  client_hashes=early_refs)
+    assert next_step == 3
+    assert np.array_equal(tr.state["params"], x)
+    plan = tr.last_restore_plan
+    assert plan["route"].startswith("edge-")
+    assert plan["missing"] > 0 and plan["bytes_moved"] > 0
+
+
+# ---------------------------------------------------------------------------
+# shared Membership mixin
+# ---------------------------------------------------------------------------
+def test_membership_verbs_shared_across_planes():
+    origin, refs, tier = _tier(3)
+    rs = ReplicaSet(ChunkStore(), [ChunkStore()])
+    for plane in (tier, rs):
+        plane.mark_down(1)
+        assert plane.is_down(1)
+        with pytest.raises(ValueError):
+            plane.promote(1)              # down member can't lead
+        plane.mark_up(1)
+        plane.promote(1)
+        assert plane.primary_index == 1
+        with pytest.raises(ValueError):
+            plane.remove(1)               # never drop the primary
+        with pytest.raises(IndexError):
+            plane.mark_down(99)
+
+
+def test_membership_remove_remaps_indices():
+    origin, refs, tier = _tier(3)
+    tier.mark_down(2)
+    tier.promote(1)
+    tier.remove(0)
+    assert tier.primary_index == 0        # shifted down with the removal
+    assert tier.is_down(1)                # old index 2 followed its member
+    assert tier.cache_ids() == ["edge-1", "edge-2"]
+
+
+# ---------------------------------------------------------------------------
+# Wire protocol + deprecated shims
+# ---------------------------------------------------------------------------
+def test_chunkstore_satisfies_wire_protocol():
+    assert isinstance(ChunkStore(), Wire)
+    assert isinstance(EdgeCache("c").store, Wire)
+
+
+def test_transfer_plan_unpacks_as_legacy_tuple():
+    plan = TransferPlan(["r"], 5, 2)
+    missing, moved, dedup = plan
+    assert (missing, moved, dedup) == (["r"], 5, 2)
+    assert plan[2] == 2 and len(plan) == 3 and bool(plan)
+    assert not TransferPlan([], 0, 9)
+
+
+def test_deprecated_shims_warn_and_delegate():
+    origin, refs = _capsule()
+    sink = ChunkStore(chunk_bytes=CHUNK)
+    with pytest.deprecated_call():
+        plan = origin.transfer_plan(refs, set())
+    assert tuple(plan) == tuple(origin.plan_send(refs, set()))
+    with pytest.deprecated_call():
+        records = origin.export_records(plan.refs)
+    assert records == origin.send(plan.refs)
+    offered = {r: origin.object_size(r) for r in plan.refs}
+    with pytest.deprecated_call():
+        iplan = sink.ingest_plan(offered, client_id="c")
+    assert tuple(iplan) == tuple(sink.plan_recv(offered, client_id="c"))
+    with pytest.deprecated_call():
+        written = sink.ingest(records, client_id="c")
+    assert written > 0
+    assert sink.resolve_buffer(refs) == origin.resolve_buffer(refs)
+
+
+def test_replicaset_ingest_shim_still_enqueues():
+    rs = ReplicaSet(ChunkStore(chunk_bytes=CHUNK),
+                    [ChunkStore(chunk_bytes=CHUNK)])
+    src = ChunkStore(chunk_bytes=CHUNK)
+    ref = src.put(b"payload" * 100)
+    with pytest.deprecated_call():
+        rs.ingest(src.send([ref]))
+    assert ref in rs.outbox               # replication still queued
+    rs.pump()
+    assert rs.members[1].has(ref)

@@ -156,7 +156,7 @@ def test_gc_racing_ingest_of_chain_on_collected_parent():
     ph = client.put(base.tobytes())
     dref = client.put_delta(ph, (base ^ new).tobytes(),
                             full_bytes=new.tobytes())
-    records = client.export_records([ph, dref])       # whole chain uplinks
+    records = client.send([ph, dref])       # whole chain uplinks
 
     real_write = server._write_delta
     fired = {"n": 0}
@@ -169,7 +169,7 @@ def test_gc_racing_ingest_of_chain_on_collected_parent():
 
     server._write_delta = racing_write
     try:
-        server.ingest(records)
+        server.recv(records)
     finally:
         server._write_delta = real_write
     # raws are applied before deltas, so the mid-ingest GC collected the
@@ -181,7 +181,7 @@ def test_gc_racing_ingest_of_chain_on_collected_parent():
         except (IOError, KeyError, FileNotFoundError):
             pass                                      # detected, not garbage
     # a follow-up ingest of the same chain must repair the store fully
-    server.ingest(client.export_records([ph, dref]))
+    server.recv(client.send([ph, dref]))
     assert server.resolve(dref) == new.tobytes()
 
 
@@ -208,7 +208,7 @@ def test_gc_concurrent_chain_reference_keeps_parent():
 
     server._write_delta = racing_write
     try:
-        server.ingest(client.export_records([dref]))
+        server.recv(client.send([dref]))
     finally:
         server._write_delta = real_write
     assert server.has(ph) and not server.has(stale)   # parent survived

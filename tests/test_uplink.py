@@ -2,7 +2,7 @@
 
 Concurrent-writer invariants (two clients against one parent, chain-cap
 rebase racing GC, v1→v2 restore after an uplink-written round), the
-encode → ingest_plan → ingest → resolve protocol, server-side quorum
+encode → plan_recv → recv → resolve protocol (Wire), server-side quorum
 folding, and the trainer's round loop with per-worker uplink credit.
 """
 import threading
@@ -44,9 +44,9 @@ def test_two_clients_put_delta_against_same_parent():
         assert is_delta_ref(ref)
         offered = {r: client.object_size(r)
                    for r in client.live_closure([ref])}
-        needed, moved, dedup = server.ingest_plan(offered, client_id=cid)
+        needed, moved, dedup = server.plan_recv(offered, client_id=cid)
         assert parent not in needed                # server already holds it
-        server.ingest(client.export_records(needed), client_id=cid)
+        server.recv(client.send(needed), client_id=cid)
         results[cid] = (ref, bytes(new))
 
     # both children of the same parent coexist and resolve bit-exactly
@@ -59,7 +59,7 @@ def test_two_clients_put_delta_against_same_parent():
     replay.put(base)
     ref = replay.put_delta(parent, _xor(base, results["volA"][1]))
     offered = {r: replay.object_size(r) for r in replay.live_closure([ref])}
-    needed, moved, dedup = server.ingest_plan(offered, client_id="volC")
+    needed, moved, dedup = server.plan_recv(offered, client_id="volC")
     assert not needed and moved == 0 and dedup > 0
 
 
@@ -158,17 +158,17 @@ def test_ingest_rejects_tampered_and_dangling_records():
     ref = client.put_delta(parent, _xor(base, bytes(new)),
                            full_bytes=bytes(new))
 
-    recs = client.export_records([ref, parent])
+    recs = client.send([ref, parent])
     tampered = dict(recs)
     tampered[ref] = tampered[ref][:-1] + bytes([tampered[ref][-1] ^ 1])
     with pytest.raises(IOError):
-        server.ingest(tampered, client_id="evil")
+        server.recv(tampered, client_id="evil")
     assert not server.has(ref) and not server.has(parent)  # none landed
 
     dangling = {ref: recs[ref]}            # delta without its parent
     with pytest.raises(IOError):
-        server.ingest(dangling, client_id="evil")
-    server.ingest(recs, client_id="ok")    # the honest batch lands whole
+        server.recv(dangling, client_id="evil")
+    server.recv(recs, client_id="ok")    # the honest batch lands whole
     assert server.resolve(ref) == bytes(new)
 
 
@@ -257,11 +257,11 @@ def test_ingest_rejects_lied_delta_depth():
         rec = DeltaRecord(parent, lied, len(xor), xor, False).pack()
         ref = DELTA_PREFIX + sha256(rec)
         with pytest.raises(IOError, match="depth"):
-            server.ingest({ref: rec}, client_id="evil")
+            server.recv({ref: rec}, client_id="evil")
         assert not server.has(ref)
     honest = DeltaRecord(parent, 1, len(xor), xor, False).pack()
     ref = DELTA_PREFIX + sha256(honest)
-    server.ingest({ref: honest}, client_id="ok")
+    server.recv({ref: honest}, client_id="ok")
     assert server.ref_depth(ref) == 1
 
 
@@ -305,9 +305,9 @@ def test_inflated_offer_cannot_mint_credit():
     data = bytes(np.random.default_rng(6).integers(0, 256, 4096,
                                                    dtype=np.uint8))
     ref = client.put(data)
-    needed, moved, _ = server.ingest_plan({ref: 10**12}, client_id="greedy")
+    needed, moved, _ = server.plan_recv({ref: 10**12}, client_id="greedy")
     assert moved == 10**12                 # the claim, planning only
-    server.ingest(client.export_records(needed), client_id="greedy")
+    server.recv(client.send(needed), client_id="greedy")
     assert server.uplinks["greedy"]["bytes_in"] == len(data)
 
 
