@@ -123,6 +123,25 @@ def check_scheduler(current: dict, baseline: dict, tolerance: float,
         if cv > limit:
             failures.append(f"{name}: p50_us {cv:.2f} > limit {limit:.2f} "
                             f"(baseline {bv:.2f})")
+    # elastic-membership gate: splitting a hot shard under load must
+    # leave the volunteer dispatch path flat (same bound as fleet size)
+    rb = current.get("rebalance")
+    if rb is None:
+        if "rebalance" in baseline:
+            failures.append("rebalance row missing from current run")
+    else:
+        ratio = rb.get("ratio")
+        if ratio is None:
+            failures.append("rebalance ratio missing from run")
+        else:
+            verdict = "FAIL" if ratio > flat_limit else "ok"
+            print(f"  rebalance p50 {rb['p50_before_us']:.2f} -> "
+                  f"{rb['p50_after_us']:.2f}  ratio {ratio:.2f}  "
+                  f"(limit {flat_limit:.2f})  {verdict}")
+            if ratio > flat_limit:
+                failures.append(
+                    f"rebalance ratio {ratio:.2f} > {flat_limit:.2f}: "
+                    f"splitting a shard degrades the dispatch path")
     return failures
 
 

@@ -100,6 +100,56 @@ def measure_row(clients: int, shards: int, samples: int,
     }
 
 
+def measure_rebalance(clients: int = 20_000, shards: int = 4,
+                      samples: int = 300, seed: int = 0) -> dict:
+    """Split a hot shard *under load* and show dispatch stays flat.
+
+    Builds the same sustained regime as ``measure_row``, samples p50
+    before, runs ``split_shard`` on the hottest shard (timing the
+    handoff itself), then samples p50 after.  The CI gate holds
+    ``p50_after / p50_before`` within the same 2x bound as the scaling
+    curve: elastic membership must not cost the volunteer hot path."""
+    rng = np.random.default_rng(seed)
+    plane = ShardedScheduler(shards=shards, replication=1, quorum=1,
+                             deadline_s=3600.0, watermark=1,
+                             refill_batch=BURST, clock=SimClock())
+    for i in range(clients):
+        plane.join(f"v{i}")
+    for uid in range(samples * 4 + BURST * shards * 8):
+        plane.submit(uid, {"batch_index": uid})
+    h = hashlib.sha256(b"result").hexdigest()
+
+    def sample_p50(n_bursts: int) -> float:
+        lat = []
+        for i in rng.integers(0, clients, size=n_bursts):
+            w = f"v{i}"
+            for _ in range(BURST):
+                t0 = time.perf_counter()
+                wu = plane.request_work(w)
+                lat.append(time.perf_counter() - t0)
+                assert wu is not None, "backlog drained mid-measurement"
+                plane.report(w, wu.unit_id, h)
+            plane.flush_reports()
+        return float(np.percentile(np.asarray(lat), 50) * 1e6)
+
+    n_bursts = max(1, samples // BURST)
+    p50_before = sample_p50(n_bursts)
+    alive = plane.alive_shards()
+    hot = max(alive, key=lambda i: (plane.shards[i].open_backlog(), -i))
+    t0 = time.perf_counter()
+    info = plane.split_shard(hot)
+    split_ms = (time.perf_counter() - t0) * 1e3
+    p50_after = sample_p50(n_bursts)
+    return {
+        "clients": clients, "shards": shards,
+        "p50_before_us": p50_before, "p50_after_us": p50_after,
+        "ratio": p50_after / p50_before if p50_before > 0 else None,
+        "split_ms": split_ms, "split": info["split"],
+        "target": info["target"], "moved_slots": info["slots"],
+        "moved_units": info["reassigned_open"],
+    }
+
+
 def scaling_curve(tiny: bool = False, samples: int | None = None) -> dict:
     rows_spec = TINY_ROWS if tiny else FULL_ROWS
     samples = samples or (300 if tiny else 800)
@@ -109,9 +159,11 @@ def scaling_curve(tiny: bool = False, samples: int | None = None) -> dict:
     hi = by_name.get(_row_name(*GATE[1]))
     flat_ratio = (hi["p50_us"] / lo["p50_us"]
                   if lo and hi and lo["p50_us"] > 0 else None)
+    rebalance = measure_rebalance(samples=samples)
     return {"kind": "scheduler", "tiny": tiny, "samples": samples,
             "rows": rows, "flat_ratio": flat_ratio,
-            "gate": [_row_name(*GATE[0]), _row_name(*GATE[1])]}
+            "gate": [_row_name(*GATE[0]), _row_name(*GATE[1])],
+            "rebalance": rebalance}
 
 
 def capsule_fetch_line() -> str:
@@ -144,6 +196,12 @@ def run(tiny: bool = True) -> list[str]:
     lines.append(csv_line("server.flat_ratio", 0.0,
                           f"p50_{curve['gate'][1]}/p50_{curve['gate'][0]}="
                           f"{fr:.2f}" if fr else "flat_ratio=NA"))
+    rb = curve["rebalance"]
+    lines.append(csv_line(
+        "server.rebalance", rb["p50_after_us"],
+        f"p50_before_us={rb['p50_before_us']:.1f};"
+        f"ratio={rb['ratio']:.2f};split_ms={rb['split_ms']:.1f};"
+        f"moved_units={rb['moved_units']}"))
     lines.append(capsule_fetch_line())
     return lines
 
@@ -169,6 +227,11 @@ def main(argv=None) -> int:
     fr = curve["flat_ratio"]
     print(f"  flat_ratio ({curve['gate'][1]} vs {curve['gate'][0]}): "
           f"{fr:.2f}" if fr is not None else "  flat_ratio: NA")
+    rb = curve["rebalance"]
+    print(f"  rebalance        p50 {rb['p50_before_us']:.1f}us -> "
+          f"{rb['p50_after_us']:.1f}us (ratio {rb['ratio']:.2f}), "
+          f"split {rb['split_ms']:.1f}ms, "
+          f"{rb['moved_units']} units / {rb['moved_slots']} slots moved")
     if args.json:
         Path(args.json).write_text(json.dumps(curve, indent=2))
         print(f"wrote {args.json}")

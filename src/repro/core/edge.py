@@ -125,10 +125,18 @@ class EdgeCache:
         return moved
 
     def serve(self, refs: List[str]) -> Dict[str, bytes]:
-        """Pack ``refs`` for a volunteer (cache egress, counts as load)."""
-        key = closure_key(self.store.live_closure(refs))
-        if key in self._lru:
-            self._lru.move_to_end(key)
+        """Pack ``refs`` for a volunteer (cache egress, counts as load).
+
+        Recency is keyed by *resident* closures, not the request's live
+        closure: a subset fetch (or a request closed after a later fill)
+        rarely hashes to any admitted closure key, so keying the touch by
+        the request left hot closures looking cold to the LRU.  Touch
+        every admitted closure the served refs intersect instead."""
+        served = self.store.live_closure(refs)
+        touched = [k for k, (crefs, _) in self._lru.items()
+                   if not served.isdisjoint(crefs)]
+        for k in touched:
+            self._lru.move_to_end(k)
         self.served_fetches += 1
         return self.store.send(refs)
 
@@ -263,6 +271,7 @@ class EdgeTier(Membership):
             route = "origin"
         else:
             index, cache = ranked[0]
+            filled = 0
             if not cache.can_serve(plan.refs):
                 self.metrics.misses.inc()
                 self.metrics.fills.inc()
@@ -273,9 +282,14 @@ class EdgeTier(Membership):
                 self.metrics.hits.inc()
             records = cache.serve(plan.refs)
             self.metrics.cache_egress_bytes.inc(plan.bytes_moved)
-            if self.scheduler is not None:
-                self.scheduler.credit_transfer(cache.cache_id,
-                                               plan.bytes_moved)
+            # credit settles only on bytes the cache served from
+            # already-resident closures: on a demand-fill miss the origin
+            # just moved ``filled`` of plan.bytes_moved itself (it is on
+            # the origin_egress meter), so minting transfer credit for
+            # the full plan double-paid every cold fetch
+            resident = max(0, plan.bytes_moved - filled)
+            if self.scheduler is not None and resident > 0:
+                self.scheduler.credit_transfer(cache.cache_id, resident)
             route = cache.cache_id
         if client_store is not None:
             client_store.recv(records)

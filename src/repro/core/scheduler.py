@@ -159,9 +159,19 @@ class VolunteerScheduler:
     # ---------------- membership (elastic) ----------------
     def join(self, worker_id: str) -> WorkerInfo:
         info = self.workers.get(worker_id)
-        if info is None or not info.alive:
+        if info is None:
             info = WorkerInfo(worker_id, self.clock())
             self.workers[worker_id] = info
+        elif not info.alive:
+            # revive in place: a volunteer that left and came back keeps
+            # its credit/completed/invalid/uplink ledger (replacing the
+            # record wiped the counters, so every leave→rejoin cycle —
+            # and the shard-failover merge that joins a worker on its new
+            # home — destroyed minted credit)
+            info.alive = True
+            info.joined = self.clock()
+            info.backoff_until = 0.0
+            info.backoff_k = 0
         return info
 
     def leave(self, worker_id: str) -> None:

@@ -7,9 +7,10 @@ delivery) — with every random choice drawn from one seeded generator, so
 a failing schedule replays bit-for-bit from its seed.
 
 The same driver also churns the *scheduler plane*: constructed with
-``shards=`` (a ``ShardedScheduler``) it kills scheduler shards —
-scripted (``kill_shard``) or seeded (``random_shard_kill``) — so the
-shard-failover path (key-range reassignment + open-unit migration) is
+``shards=`` (a ``ShardedScheduler``) it churns scheduler membership —
+scripted (``kill_shard``, ``add_shard``, ``split_hot_shard``,
+``rejoin_shard``) or seeded (``random_shard_kill``) — so the elastic
+handoff path (key-range reassignment + open-unit migration) is
 exercised by the exact deterministic machinery that already drives
 replica failover.  With ``edges=`` (an ``EdgeTier``) it churns the
 edge-cache tier through the same shared ``Membership`` verbs:
@@ -202,13 +203,17 @@ class ChurnSim:
         return index
 
     # -- scheduler-shard churn --------------------------------------------
+    def _need_shards(self):
+        if self.shards is None:
+            raise RuntimeError("sim was built without shards=")
+        return self.shards
+
     def kill_shard(self, index: int) -> Dict[str, int]:
         """Kill scheduler shard ``index``: its key range and open units
         reassign deterministically to the survivors (fail_shard)."""
-        if self.shards is None:
-            raise RuntimeError("sim was built without shards=")
+        shards = self._need_shards()
         self._tick("fault")
-        info = self.shards.fail_shard(index)
+        info = shards.fail_shard(index)
         self._log("kill_shard", (index, info))
         self._dump_fault("kill_shard")
         self.phase = "idle"
@@ -217,14 +222,57 @@ class ChurnSim:
     def random_shard_kill(self) -> Optional[int]:
         """Kill a seeded-random alive shard (never the last one); -> the
         killed index, or None when only one shard survives."""
-        if self.shards is None:
-            raise RuntimeError("sim was built without shards=")
-        alive = self.shards.alive_shards()
+        shards = self._need_shards()
+        alive = shards.alive_shards()
         if len(alive) < 2:
             return None
         index = int(alive[self.rng.integers(len(alive))])
         self.kill_shard(index)
         return index
+
+    def add_shard(self) -> int:
+        """A new scheduler shard joins the plane and takes its share of
+        range slots from the most-loaded owners; -> its index."""
+        shards = self._need_shards()
+        self._tick("fault")
+        index = shards.add_shard()
+        self._log("add_shard", index)
+        self._dump_fault("add_shard")
+        self.phase = "idle"
+        return index
+
+    def split_hot_shard(self) -> Optional[int]:
+        """Split the hottest alive shard (largest open backlog,
+        deterministic index tie-break) into the least-loaded one; -> the
+        split shard's index, or None when there is nothing worth
+        splitting (single alive shard, empty backlog, or the hot shard
+        owns a single slot)."""
+        shards = self._need_shards()
+        alive = shards.alive_shards()
+        if len(alive) < 2:
+            return None
+        hot = max(alive,
+                  key=lambda i: (shards.shards[i].open_backlog(), -i))
+        owned = sum(1 for o in shards._range_owner if o == hot)
+        if shards.shards[hot].open_backlog() == 0 or owned < 2:
+            return None
+        self._tick("fault")
+        info = shards.split_shard(hot)
+        self._log("split_shard", (hot, info))
+        self._dump_fault("split_shard")
+        self.phase = "idle"
+        return hot
+
+    def rejoin_shard(self, index: int) -> Dict[str, int]:
+        """A previously killed shard returns empty and earns slots back
+        from the most-loaded owners."""
+        shards = self._need_shards()
+        self._tick("fault")
+        info = shards.rejoin_shard(index)
+        self._log("rejoin_shard", (index, info))
+        self._dump_fault("rejoin_shard")
+        self.phase = "idle"
+        return info
 
     # -- edge-cache churn --------------------------------------------------
     def _need_edges(self):

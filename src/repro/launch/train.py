@@ -71,6 +71,10 @@ def main(argv=None) -> dict:
                          "across N VolunteerScheduler shards (watermark "
                          "refill + work stealing; dispatch stays O(1) as "
                          "the fleet grows)")
+    ap.add_argument("--rebalance", action="store_true",
+                    help="elastic shard policy: after each round, split "
+                         "the hottest shard into the coldest when its "
+                         "backlog runs 2x ahead (needs --shards > 1)")
     ap.add_argument("--watermark", type=int, default=2,
                     help="per-volunteer pending-queue low watermark "
                          "(sharded plane only)")
@@ -232,11 +236,20 @@ def main(argv=None) -> dict:
     trainer.respawn = lambda tr: spawn(1)
 
     t0 = time.time()
+    rebalance_splits = 0
     for s in range(start_step, start_step + args.steps):
         alive = sum(w.alive for w in trainer.workers.values())
         if alive < args.workers:
             spawn(args.workers - alive)
         st = trainer.round(s)
+        if args.rebalance and args.shards > 1:
+            moved = sched.rebalance()
+            if moved is not None:
+                rebalance_splits += 1
+                print(f"step {s:4d} rebalance: split shard "
+                      f"{moved['split']} -> {moved['target']} "
+                      f"({moved['slots']} slots, "
+                      f"{moved['reassigned_open']} open units)")
         if s % args.log_every == 0:
             up = (f" up {st.uplink_moved}/{st.uplink_dense}"
                   if args.uplink else "")
@@ -260,6 +273,8 @@ def main(argv=None) -> dict:
     }
     if args.shards > 1:
         summary["shard_plane"] = sched.shard_report()
+        if args.rebalance:
+            summary["rebalance_splits"] = rebalance_splits
     if args.async_writer:
         summary["snapshot_writer"] = {
             k: round(v, 2) if isinstance(v, float) else v

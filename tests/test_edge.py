@@ -162,6 +162,26 @@ def test_fetch_earns_credit_for_the_serving_cache():
     assert info.credit > 0
 
 
+def test_cold_demand_fill_mints_no_transfer_credit():
+    """S4 regression: on a demand-fill miss the origin moved the bytes
+    (its egress meter ran) — the cache must not also be credited for
+    them.  Credit settles only on bytes served from residency."""
+    sched = VolunteerScheduler()
+    origin, refs, tier = _tier(2, prefetch=False, scheduler=sched)
+    res = tier.fetch(refs, set())
+    assert res.route != "origin"             # a cache served, via a fill
+    assert tier.stats["fills"] == 1
+    assert tier.stats["fill_bytes"] == res.bytes_moved
+    total = sum(i.credit for i in sched.workers.values())
+    assert total == 0, "cache credited for bytes the origin moved"
+    # the SAME fetch again is now fully resident: full credit this time
+    res2 = tier.fetch(refs, set())
+    assert tier.stats["fills"] == 1          # no second fill
+    info = sched.workers[res2.route]
+    assert info.uplink_bytes == res2.bytes_moved
+    assert info.credit > 0
+
+
 def test_fetch_route_trace_events():
     tel = tlm.Telemetry(tracing=True, clock=SimClock())
     origin, refs, tier = _tier(2, telemetry=tel)
@@ -204,6 +224,33 @@ def test_lru_evicts_whole_closures_never_tearing_chains():
         # a served chain must still resolve — no torn deltas
         assert (cache.store.resolve_buffer(refs)
                 == origin.resolve_buffer(refs))
+
+
+def test_serve_touches_every_intersecting_closure():
+    """S3 regression: a subset fetch must refresh the recency of the
+    resident closure(s) it hits, or hot closures evict as if cold."""
+    origin = ChunkStore(chunk_bytes=CHUNK)
+    closures = []
+    rng = np.random.default_rng(11)
+    for i in range(3):
+        data = rng.integers(0, 256, size=2 * CHUNK, dtype=np.uint8)
+        refs = origin.put_buffer(memoryview(data))
+        xor = np.zeros(CHUNK, np.uint8)
+        xor[i] = 1
+        refs[0] = origin.put_delta(refs[0], xor.tobytes())
+        closures.append(refs)
+    a, b, c = closures
+    nbytes = sum(origin.object_size(r) for r in origin.live_closure(a))
+    cache = EdgeCache("tiny", capacity_bytes=int(nbytes * 2.5))
+    cache.fill_from(origin, a)
+    cache.fill_from(origin, b)
+    # a *subset* fetch of A's closure (one raw chunk, not the admitted
+    # key) — the touch must still land on A's resident closure
+    cache.serve([a[1]])
+    cache.fill_from(origin, c)               # capacity: one closure evicts
+    # LRU order after the touch is B < A < C, so B left and A survived
+    assert cache.can_serve(origin.live_closure(a))
+    assert not any(cache.store.has(r) for r in b)
 
 
 def test_prefetch_base_only_skips_delta_chains():

@@ -35,6 +35,7 @@ OP = st.one_of(
     st.tuples(st.just("request"), st.integers(0, 7)),
     st.tuples(st.just("report"), st.integers(0, 7), st.booleans()),
     st.tuples(st.just("leave"), st.integers(0, 7)),
+    st.tuples(st.just("rejoin"), st.integers(0, 7)),
     st.tuples(st.just("advance"), st.integers(1, 240)),
     st.tuples(st.just("transfer"), st.integers(0, 7), st.integers(1, 8)),
 )
@@ -57,11 +58,11 @@ def drive(ops, rep, quo):
 
     def spawn():
         nonlocal next_wid
-        w = f"w{next_wid}"           # ids are never reused: rejoining a
-        next_wid += 1                # dead worker resets its credit (by
-        s.join(w)                    # design), which would break the
-        alive.append(w)              # conservation ledger below
-        everyone.append(w)
+        w = f"w{next_wid}"           # fresh ids here; the "rejoin" op
+        next_wid += 1                # below reuses departed ids, and the
+        s.join(w)                    # revive-in-place join keeps their
+        alive.append(w)              # credit, so conservation holds
+        everyone.append(w)           # across every leave -> rejoin cycle
         return w
 
     spawn()
@@ -90,6 +91,13 @@ def drive(ops, rep, quo):
         elif kind == "leave" and len(alive) > 1:
             w = alive.pop(op[1] % len(alive))
             s.leave(w)
+        elif kind == "rejoin":
+            departed = [w for w in everyone if w not in alive]
+            if departed:
+                w = departed[op[1] % len(departed)]
+                info = s.join(w)     # revive in place: ledger survives
+                assert info.alive
+                alive.append(w)
         elif kind == "advance":
             clock.advance(op[1] / 2.0)
         elif kind == "transfer" and everyone:
@@ -130,6 +138,123 @@ def drive(ops, rep, quo):
        repq=st.sampled_from([(1, 1), (2, 1), (2, 2), (3, 2), (3, 3)]))
 def test_scheduler_conserves_its_ledger(ops, repq):
     drive(ops, *repq)
+
+
+PLANE_OP = st.one_of(
+    st.tuples(st.just("submit"), st.integers(1, 4)),
+    st.tuples(st.just("join"), st.just(0)),
+    st.tuples(st.just("request"), st.integers(0, 7)),
+    st.tuples(st.just("report"), st.integers(0, 7)),
+    st.tuples(st.just("leave"), st.integers(0, 7)),
+    st.tuples(st.just("rejoin"), st.integers(0, 7)),
+    st.tuples(st.just("advance"), st.integers(1, 240)),
+    st.tuples(st.just("transfer"), st.integers(0, 7), st.integers(1, 8)),
+    st.tuples(st.just("kill_shard"), st.integers(0, 5)),
+    st.tuples(st.just("rejoin_shard"), st.just(0)),
+    st.tuples(st.just("add_shard"), st.just(0)),
+    st.tuples(st.just("split_shard"), st.integers(0, 5)),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(ops=st.lists(PLANE_OP, max_size=120))
+def test_plane_conserves_credit_across_membership_churn(ops):
+    """Total minted credit stays completed-units + transferred MiB under
+    arbitrary interleavings of volunteer leave -> rejoin with shard
+    fail/rejoin/add/split — no handoff or ledger merge mints or loses."""
+    from repro.core.shardplane import ShardedScheduler
+
+    clock = SimClock()
+    p = ShardedScheduler(shards=3, replication=1, quorum=1,
+                         deadline_s=20.0, backoff_base_s=0.5,
+                         backoff_max_s=8.0, watermark=2, refill_batch=4,
+                         clock=clock)
+    next_uid, next_wid = 0, 0
+    alive, everyone, outstanding = [], [], []
+    killed_shards = []
+    transferred_mib = 0.0
+    drained = []
+
+    def spawn():
+        nonlocal next_wid
+        w = f"w{next_wid}"
+        next_wid += 1
+        p.join(w)
+        alive.append(w)
+        everyone.append(w)
+        return w
+
+    spawn()
+    for op in ops:
+        kind = op[0]
+        if kind == "submit":
+            for _ in range(op[1]):
+                p.submit(next_uid, {"i": next_uid})
+                next_uid += 1
+        elif kind == "join":
+            spawn()
+        elif kind == "request" and alive:
+            w = alive[op[1] % len(alive)]
+            wu = p.request_work(w)
+            if wu is not None:
+                outstanding.append((w, wu.unit_id))
+        elif kind == "report" and outstanding:
+            w, uid = outstanding.pop(op[1] % len(outstanding))
+            p.report(w, uid, f"h{uid}")
+        elif kind == "leave" and len(alive) > 1:
+            w = alive.pop(op[1] % len(alive))
+            p.leave(w)
+        elif kind == "rejoin":
+            departed = [w for w in everyone if w not in alive]
+            if departed:
+                w = departed[op[1] % len(departed)]
+                p.join(w)
+                alive.append(w)
+        elif kind == "advance":
+            clock.advance(op[1] / 2.0)
+        elif kind == "transfer" and everyone:
+            w = everyone[op[1] % len(everyone)]
+            p.credit_transfer(w, op[2] << 18)     # op[2]/4 MiB
+            transferred_mib += op[2] / 4.0
+        elif kind == "kill_shard":
+            shards_up = p.alive_shards()
+            if len(shards_up) > 1:
+                victim = shards_up[op[1] % len(shards_up)]
+                p.fail_shard(victim)
+                killed_shards.append(victim)
+        elif kind == "rejoin_shard" and killed_shards:
+            p.rejoin_shard(killed_shards.pop(0))
+        elif kind == "add_shard":
+            if p.n_shards < 6:
+                p.add_shard()
+        elif kind == "split_shard":
+            shards_up = p.alive_shards()
+            cand = [i for i in shards_up
+                    if sum(1 for o in p._range_owner if o == i) >= 2]
+            if len(shards_up) > 1 and cand:
+                p.split_shard(cand[op[1] % len(cand)])
+        drained.extend(p.drain_completed())
+
+    # work the backlog down with fresh honest finishers
+    finishers = [spawn() for _ in range(2)]
+    for _ in range(8 * max(1, p.open_backlog()) + 60):
+        if p.done():
+            break
+        for w in finishers:
+            wu = p.request_work(w)
+            if wu is not None:
+                p.report(w, wu.unit_id, f"h{wu.unit_id}")
+        clock.advance(40.0)
+        drained.extend(p.drain_completed())
+    assert p.done(), f"backlog never drained: {p.open_backlog()} open"
+    drained.extend(p.drain_completed())
+
+    done_ids = [uid for uid, _ in drained]
+    assert len(done_ids) == len(set(done_ids))
+    assert set(done_ids) == set(range(next_uid))
+    total_credit = sum(i.credit for i in p.workers.values())
+    assert total_credit == pytest.approx(next_uid + transferred_mib), \
+        "membership churn minted or destroyed credit"
 
 
 @settings(**SETTINGS)

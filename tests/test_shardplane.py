@@ -41,22 +41,30 @@ class Harness:
     def __init__(self, sched, clock: SimClock, seed: int, *,
                  n_units: int = 240, corrupt: float = 0.0,
                  churn: bool = True, kill_at_frac: float = 0.0,
-                 check_every: int = 64):
+                 plane_script=None, check_every: int = 64):
         self.sched = sched
         self.clock = clock
         self.rng = np.random.default_rng(seed)
         self.n_units = n_units
         self.corrupt = corrupt
         self.churn = churn
-        # kill a random shard once this fraction of units completed
-        # (0 = never) — guaranteed mid-run, whatever the op mix does
-        self.kill_at_frac = kill_at_frac
+        # membership schedule: [(frac, verb)] applies each elastic verb
+        # ("kill"/"add"/"split"/"rejoin") once that fraction of units
+        # completed — guaranteed mid-run, whatever the op mix does.
+        # kill_at_frac is the single-kill shorthand the older tests use.
+        if plane_script is None:
+            plane_script = ([(kill_at_frac, "kill")]
+                            if kill_at_frac else [])
+        self.plane_script = sorted(plane_script)
+        self._script_pos = 0
         self.check_every = check_every
         self.submitted = 0
         self.alive: set[str] = set()
         self.next_vol = 0
         self.completions: list[tuple[int, str]] = []
         self.killed_shard = None
+        self.killed_stack: list[int] = []
+        self.verbs_applied: list[str] = []
         self.max_results_seen = 0
 
     def spawn(self, n: int = 1) -> None:
@@ -95,6 +103,37 @@ class Harness:
         else:
             self.clock.advance(float(self.rng.integers(1, 120)))
 
+    def _membership_verb(self, verb: str) -> None:
+        s = self.sched
+        if verb == "kill":
+            alive = s.alive_shards()
+            if len(alive) < 2:
+                return
+            victim = int(alive[self.rng.integers(len(alive))])
+            s.fail_shard(victim)
+            if self.killed_shard is None:
+                self.killed_shard = victim
+            self.killed_stack.append(victim)
+        elif verb == "add":
+            s.add_shard()
+        elif verb == "split":
+            alive = s.alive_shards()
+            if len(alive) < 2:
+                return
+            hot = max(alive,
+                      key=lambda i: (s.shards[i].open_backlog(), -i))
+            owned = sum(1 for o in s._range_owner if o == hot)
+            if owned < 2:
+                return
+            s.split_shard(hot)
+        elif verb == "rejoin":
+            if not self.killed_stack:
+                return
+            s.rejoin_shard(self.killed_stack.pop(0))
+        else:
+            raise ValueError(f"unknown membership verb {verb!r}")
+        self.verbs_applied.append(verb)
+
     def _mid_run_checks(self) -> None:
         # bounded replication holds at every instant, not just at the end
         for _, h in self.completions:
@@ -115,13 +154,12 @@ class Harness:
             assert ops < max_ops, (
                 f"harness did not converge: {self.sched.stats}")
             self._op()
-            if (self.kill_at_frac and self.killed_shard is None
-                    and len(self.completions)
-                    >= self.kill_at_frac * self.n_units):
-                alive = self.sched.alive_shards()
-                self.killed_shard = int(
-                    alive[self.rng.integers(len(alive))])
-                self.sched.fail_shard(self.killed_shard)
+            while (self._script_pos < len(self.plane_script)
+                   and len(self.completions) >= self.plane_script[
+                       self._script_pos][0] * self.n_units):
+                verb = self.plane_script[self._script_pos][1]
+                self._script_pos += 1
+                self._membership_verb(verb)
             got = self.sched.drain_completed()
             self.completions.extend(got)
             if ops % self.check_every == 0:
@@ -213,6 +251,39 @@ def test_oracle_differential_quorum_corruption(seed):
 
     assert got == ref
     assert_invariants(ph, expect_corrupt=True)
+
+
+# ---------------------------------------------------------------------------
+# oracle differential: elastic membership — randomized join/split/kill/
+# rejoin schedules stay byte-identical to the single scheduler
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_oracle_differential_elastic_membership(seed):
+    cfg = dict(replication=1, quorum=1, deadline_s=30.0,
+               backoff_base_s=0.5, backoff_max_s=20.0)
+    oclock = SimClock()
+    oracle = VolunteerScheduler(clock=oclock, **cfg)
+    oh = Harness(oracle, oclock, seed, n_units=240)
+    ref = completion_bytes(oh.run())
+
+    pclock = SimClock()
+    plane = ShardedScheduler(shards=4, clock=pclock, watermark=2,
+                             refill_batch=4, **cfg)
+    script = [(0.10, "add"), (0.25, "split"), (0.40, "kill"),
+              (0.55, "rejoin"), (0.70, "split")]
+    ph = Harness(plane, pclock, seed, n_units=240, plane_script=script)
+    got = completion_bytes(ph.run())
+
+    # every verb fired (kill always finds >= 2 alive; rejoin follows it)
+    assert ph.verbs_applied.count("kill") == 1
+    assert ph.verbs_applied.count("add") == 1
+    assert ph.verbs_applied.count("rejoin") == 1
+    # the rejoined shard came back: the whole fleet of 5 is alive
+    assert plane.stats["shards"] == 5
+    assert plane.stats["shards_alive"] == 5
+    assert got == ref, "elastic completion set diverged from the oracle"
+    assert_invariants(ph, expect_corrupt=False)
+    assert_invariants(oh, expect_corrupt=False)
 
 
 # ---------------------------------------------------------------------------
@@ -413,6 +484,199 @@ def test_fail_shard_guards():
         p.fail_shard(0)                  # already down
     with pytest.raises(ValueError):
         p.fail_shard(1)                  # never kill the last shard
+
+
+# ---------------------------------------------------------------------------
+# elastic membership: add / split / rejoin
+# ---------------------------------------------------------------------------
+def test_add_shard_takes_fair_share_from_loaded_owners():
+    clock = SimClock()
+    p = ShardedScheduler(shards=2, clock=clock)
+    for u in range(64):
+        p.submit(u, {})
+    idx = p.add_shard()
+    assert idx == 2 and p.stats["shards"] == 3
+    owned = [sum(1 for o in p._range_owner if o == i) for i in range(3)]
+    # n_slots=8 over 3 shards: the newcomer earns floor(8/3)=2 slots and
+    # every unit resident on those slots moved with them
+    assert owned[2] == 2
+    assert sum(owned) == p.n_slots
+    for uid, sidx in p._unit_shard.items():
+        assert p._range_owner[p.unit_slot(uid)] == sidx
+    # the new shard serves its slice: a full drain still completes all
+    p.join("w")
+    guard = 0
+    while not p.done():
+        guard += 1
+        assert guard < 500
+        wu = p.request_work("w")
+        if wu is None:
+            clock.advance(50.0)
+            continue
+        p.report("w", wu.unit_id, honest_hash(wu.unit_id))
+    assert {u for u, _ in p.drain_completed()} == set(range(64))
+
+
+def test_split_shard_halves_backlog_and_preserves_credit():
+    clock = SimClock()
+    p = ShardedScheduler(shards=2, clock=clock, replication=1, quorum=1)
+    # stock ONLY shard 0: it becomes the hot shard the policy splits
+    uids = [u for u in range(2000)
+            if p._range_owner[p.unit_slot(u)] == 0][:60]
+    for u in uids:
+        p.submit(u, {})
+    p.join("a")
+    # `a` holds live leases on the shard about to split
+    held = []
+    for _ in range(4):
+        wu = p.request_work("a")
+        if wu is not None:
+            held.append(wu.unit_id)
+    before = p.shards[0].open_backlog()
+    info = p.split_shard(0)
+    assert info["split"] == 0 and info["target"] == 1
+    assert info["slots"] >= 1
+    # the handoff moved real open units and roughly halved the load
+    after = [p.shards[i].open_backlog() for i in range(2)]
+    assert after[0] < before and after[1] > 0
+    assert abs(after[0] - after[1]) < before / 2
+    # leases on moved units dropped; everything still completes once,
+    # credit conserved at 1.0/unit
+    for uid in held:
+        p.report("a", uid, honest_hash(uid))
+    guard = 0
+    while not p.done():
+        guard += 1
+        assert guard < 1000
+        wu = p.request_work("a")
+        if wu is None:
+            clock.advance(50.0)
+            continue
+        p.report("a", wu.unit_id, honest_hash(wu.unit_id))
+    done = p.drain_completed()
+    assert {u for u, _ in done} == set(uids)
+    assert sum(i.credit for i in p.workers.values()) \
+        == pytest.approx(len(uids))
+
+
+def test_split_shard_guards():
+    clock = SimClock()
+    p = ShardedScheduler(shards=2, clock=clock)
+    with pytest.raises(ValueError):
+        p.split_shard(0, target=0)           # self-target
+    p.fail_shard(1)
+    with pytest.raises(ValueError):
+        p.split_shard(1)                     # dead shard
+    with pytest.raises(ValueError):
+        p.split_shard(0)                     # no other alive shard
+
+
+def test_rejoin_shard_returns_empty_and_earns_slots_back():
+    clock = SimClock()
+    p = ShardedScheduler(shards=3, clock=clock)
+    for u in range(60):
+        p.submit(u, {})
+    p.fail_shard(0)
+    assert sum(1 for o in p._range_owner if o == 0) == 0
+    with pytest.raises(ValueError):
+        p.rejoin_shard(1)                    # alive shard can't rejoin
+    info = p.rejoin_shard(0)
+    assert p.stats["shards_alive"] == 3
+    # back with a fair share: floor(12/3) = 4 slots, and the resident
+    # units of those slots migrated in with ownership
+    assert sum(1 for o in p._range_owner if o == 0) == 4
+    assert info["slots"] == 4
+    assert all(not wu.completed for wu in p.shards[0].units.values())
+    for uid, sidx in p._unit_shard.items():
+        assert p._range_owner[p.unit_slot(uid)] == sidx
+    # the full cycle still completes every unit exactly once
+    p.join("w")
+    guard = 0
+    while not p.done():
+        guard += 1
+        assert guard < 500
+        wu = p.request_work("w")
+        if wu is None:
+            clock.advance(50.0)
+            continue
+        p.report("w", wu.unit_id, honest_hash(wu.unit_id))
+    assert {u for u, _ in p.drain_completed()} == set(range(60))
+
+
+def test_rejoin_preserves_worker_ledger():
+    """S1 regression: leave -> rejoin must not wipe minted credit."""
+    clock = SimClock()
+    s = VolunteerScheduler(replication=1, quorum=1, clock=clock)
+    s.join("w")
+    s.submit(0, {})
+    wu = s.request_work("w")
+    s.report("w", wu.unit_id, "H")
+    assert s.workers["w"].credit == pytest.approx(1.0)
+    s.leave("w")
+    info = s.join("w")                       # the volunteer comes back
+    assert info.alive
+    assert info.credit == pytest.approx(1.0), \
+        "rejoin wiped the worker's credit ledger"
+    assert info.completed == 1
+    assert info.backoff_k == 0 and info.backoff_until == 0.0
+
+
+def test_refill_sizes_from_valid_entries_only():
+    """S2 regression: expired queue entries must not shrink the refill."""
+    clock = SimClock()
+    p = ShardedScheduler(shards=2, clock=clock, watermark=2,
+                         refill_batch=6, deadline_s=30.0, steal=False)
+    w = "vol-0"
+    p.join(w)
+    home = p.home_shard(w)
+    uids = [u for u in range(400)
+            if p._range_owner[p.unit_slot(u)] == home][:30]
+    for u in uids:
+        p.submit(u, {})
+    assert p.request_work(w) is not None     # queue: 7 leased entries
+    assert p.plane_stats["refill_units"] == 8
+    # churn: the home shard dies, its units migrate and the leases drop
+    # — the 7 queued entries are now all invalid but still in the queue
+    p.fail_shard(home)
+    assert p.request_work(w) is not None
+    # sizing from the raw queue would ask for 8 - 7 = 1 unit; pruning
+    # first asks for the full watermark + batch again
+    assert p.plane_stats["refill_units"] == 16, \
+        "refill sized from stale queue entries"
+
+
+def test_steal_prefers_low_request_rate_victim():
+    """The steal policy weighs backlog by per-shard demand: a big backlog
+    that is being drained fast by its own volunteers is a worse victim
+    than a smaller idle one."""
+    def build():
+        clock = SimClock()
+        p = ShardedScheduler(shards=3, clock=clock, watermark=1,
+                             refill_batch=2)
+        w = "vol-0"
+        p.join(w)
+        home = p.home_shard(w)
+        others = [i for i in range(3) if i != home]
+        big, small = others[0], others[1]
+        big_units = [u for u in range(600)
+                     if p._range_owner[p.unit_slot(u)] == big][:12]
+        small_units = [u for u in range(600)
+                       if p._range_owner[p.unit_slot(u)] == small][:8]
+        for u in big_units + small_units:
+            p.submit(u, {})
+        return p, w, big, small
+
+    # baseline: no demand anywhere -> raw backlog picks the big shard
+    p, w, big, small = build()
+    unit = p.request_work(w)
+    assert p._unit_shard[unit.unit_id] == big
+    # same backlogs, but the big shard is under heavy home demand:
+    # 12/(1+5) = 2 effective < 8 idle -> steal from the small shard
+    p, w, big, small = build()
+    p._shard_req[big].inc(5)
+    unit = p.request_work(w)
+    assert p.plane_stats["steals"] == 1
+    assert p._unit_shard[unit.unit_id] == small
 
 
 # ---------------------------------------------------------------------------
